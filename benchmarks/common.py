@@ -1,0 +1,29 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import numpy as np
+
+
+def bench(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+          **kwargs) -> Tuple[float, object]:
+  """Median wall-time (µs) of ``fn(*args)`` with block_until_ready."""
+  out = None
+  for _ in range(warmup):
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+  times = []
+  for _ in range(iters):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    times.append(time.perf_counter() - t0)
+  return float(np.median(times) * 1e6), out
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+  return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,4 @@
+"""Compatibility shim — the analyzer lives in repro.analysis.hlo_cost."""
+
+from repro.analysis.hlo_cost import *  # noqa: F401,F403
+from repro.analysis.hlo_cost import HloCost, analyze, parse_hlo  # noqa: F401

@@ -1,0 +1,41 @@
+"""Serve a small model with batched requests: prefill + batched decode.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as C
+from repro.models.common import init_params
+from repro.models.transformer import build_model
+from repro.serve import generate
+
+
+def main():
+  cfg = C.get_smoke_config("mixtral_8x7b").scaled(
+      num_layers=4, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+      vocab_size=1024, num_experts=4, top_k=2, moe_d_ff=256)
+  model = build_model(cfg, tp=1)
+  params = init_params(model.defs(), jax.random.PRNGKey(0))
+
+  batch = 4
+  prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, 8), 0,
+                              cfg.vocab_size)
+  t0 = time.time()
+  out = generate(model, params, prompt, max_new=24,
+                 rng=jax.random.PRNGKey(2), greedy=False)
+  dt = time.time() - t0
+  toks = batch * 24
+  print(f"served {batch} requests × 24 new tokens in {dt:.1f}s "
+        f"({toks/dt:.1f} tok/s on 1 CPU core, MoE top-2 routing live)")
+  print("continuations:")
+  for row in np.asarray(out):
+    print("  ", row.tolist())
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,46 @@
+"""Breadth-First Search (paper Section 3-II, Graph500 kernel).
+
+Distance(v) = min(Distance(v), t+1); a vertex whose distance drops becomes
+active.  Message = current distance; PROCESS = msg + 1; REDUCE = min;
+APPLY = min with current.  Run on a symmetrized graph (paper's prep).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import run_graph_program
+from repro.core.vertex_program import GraphProgram
+
+Array = jax.Array
+
+UNREACHED = jnp.int32(0x7FFFFFF0)
+
+
+def bfs_program() -> GraphProgram:
+  return GraphProgram(
+      process_message=lambda m, e, d: m + jnp.int32(1),
+      reduce_kind="min",
+      apply=lambda red, old: jnp.minimum(red, old),
+      process_reads_dst=False,
+      needs_recv=False,  # min-relaxation is monotone: APPLY(∞, old) == old
+      name="bfs")
+
+
+def bfs(graph, root: int, n: int, *, backend: str = "auto",
+        max_iters: int = 0x7FFFFFF0) -> Array:
+  """Returns int32 hop distances [n] (UNREACHED where unreachable)."""
+  return _bfs_jit(graph, jnp.int32(root), n=n, backend=backend,
+                  max_iters=max_iters)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "backend", "max_iters"))
+def _bfs_jit(graph, root, *, n, backend, max_iters):
+  dist0 = jnp.full((n,), UNREACHED, jnp.int32).at[root].set(0)
+  active0 = jnp.zeros((n,), bool).at[root].set(True)
+  state = run_graph_program(graph, bfs_program(), dist0, active0,
+                            max_iters=max_iters, backend=backend)
+  return state.prop

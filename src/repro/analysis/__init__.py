@@ -1,0 +1,3 @@
+"""Compiled-artifact analysis: trip-count-aware HLO cost + roofline terms."""
+
+from repro.analysis.hlo_cost import HloCost, analyze  # noqa: F401

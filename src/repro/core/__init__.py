@@ -1,0 +1,17 @@
+"""GraphMat core: vertex programs mapped to generalized SpMV (the paper's
+primary contribution, adapted TPU-native).  See DESIGN.md §3."""
+
+from repro.core.semiring import (  # noqa: F401
+    MIN_FIRST, MIN_PLUS, OR_AND, PLUS_TIMES, MAX_TIMES, Semiring, popcount)
+from repro.core.vertex_program import (  # noqa: F401
+    GraphProgram, program_from_semiring)
+from repro.core.graph import (  # noqa: F401
+    CooGraph, EllGraph, build_coo, build_ell, dense_adjacency)
+# NOTE: the generalized-SpMV dispatcher is exported as ``generalized_spmv``
+# so the ``repro.core.spmv`` *module* attribute is not shadowed.
+from repro.core.spmv import spmv as generalized_spmv  # noqa: F401
+from repro.core.spmv import spmv_coo, spmv_dense, spmv_ell  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    EngineState, run_fixed_iters, run_graph_program)
+from repro.core.distributed import (  # noqa: F401
+    DistGraph, partition_2d, run_graph_program_2d, spmv_2d)

@@ -1,0 +1,5 @@
+"""Graph data substrate: generators, preprocessing, partition helpers."""
+
+from repro.graphs.rmat import rmat_edges, bipartite_ratings  # noqa: F401
+from repro.graphs.preprocess import (  # noqa: F401
+    dag_orient, dedupe_edges, remove_self_loops, shuffle_vertices, symmetrize)

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: generalized blocked-ELL SpMV (the paper's hot loop).
+
+The paper spends >80% of runtime in Algorithm 1 (generalized SpMV) and
+optimizes it with cache-resident bitvectors, ``-ipo`` inlining of the user
+functions, and load-balanced partitions.  The TPU translation:
+
+* **Layout** — degree-sorted ELL: ``cols/vals/mask[n_pad, W]``.  Fixed row
+  width ⇒ the per-row reduction is a masked axis-1 reduce over a VMEM tile —
+  unit-stride, VPU-vectorized, no pointer chasing.
+* **Tiling** — grid ``(n_pad/BR, W/BW)``; each step owns a ``(BR, BW)`` tile
+  of the ELL arrays in VMEM plus the whole message vector (the analogue of
+  the paper's L3-resident bitvector+value array: after 2-D partitioning the
+  per-device source slice is small, so ``msg`` fits VMEM).  The slot axis is
+  innermost so the output tile ``y[BR]`` stays resident while partial slot
+  tiles accumulate into it.
+* **Inlining** — the user's PROCESS_MESSAGE/REDUCE are traced straight into
+  the kernel body (the ``-ipo`` effect, by construction).
+* **Messages** — scalar or K-vector payloads; K-vector turns each tile into
+  an (BR·BW, K) gather + reduce, the CF/SpMM case.
+
+Validated with ``interpret=True`` on CPU (per-kernel allclose vs ``ref.py``);
+on real TPUs the gather of ``msg`` rows uses VMEM dynamic indexing — for very
+large per-device sources a scalar-prefetch (``PrefetchScalarGridSpec``)
+column-tiled variant would be the next step (documented, not required here).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_AXIS_RED = {"add": jnp.sum, "min": jnp.min, "max": jnp.max}
+_COMBINE = {"add": jnp.add, "min": jnp.minimum, "max": jnp.maximum}
+
+
+def _identity_scalar(kind: str, dtype):
+  if kind == "add":
+    return jnp.zeros((), dtype)
+  if kind == "min":
+    return (jnp.array(jnp.inf, dtype) if jnp.issubdtype(dtype, jnp.floating)
+            else jnp.array(jnp.iinfo(dtype).max, dtype))
+  if kind == "max":
+    return (jnp.array(-jnp.inf, dtype) if jnp.issubdtype(dtype, jnp.floating)
+            else jnp.array(jnp.iinfo(dtype).min, dtype))
+  raise ValueError(kind)
+
+
+def _kernel(cols_ref, vals_ref, mask_ref, msg_ref, act_ref, dprop_ref,
+            y_ref, recv_ref, *, process, reduce_kind, out_dtype):
+  """One (BR, BW) ELL tile; slot axis (grid dim 1) accumulates into y."""
+  j = pl.program_id(1)
+
+  @pl.when(j == 0)
+  def _init():
+    y_ref[...] = jnp.full(
+        y_ref.shape, _identity_scalar(reduce_kind, out_dtype), out_dtype)
+    recv_ref[...] = jnp.zeros(recv_ref.shape, jnp.int8)
+
+  cols = cols_ref[...]                       # [BR, BW] source ids (local)
+  vals = vals_ref[...]                       # [BR, BW]
+  mask = mask_ref[...] != 0                  # [BR, BW]
+  msg = msg_ref[...]                         # [n_src, K] resident slice
+  act = act_ref[...]                         # [n_src] int8
+  dprop = dprop_ref[...]                     # [BR, Kd]
+
+  m = jnp.take(msg, cols, axis=0)            # [BR, BW, K] gather
+  a = jnp.take(act, cols, axis=0) != 0       # [BR, BW]
+  valid = jnp.logical_and(mask, a)
+
+  dp = jnp.broadcast_to(dprop[:, None, :],
+                        (dprop.shape[0], cols.shape[1], dprop.shape[1]))
+  r = process(m, vals, dp)                   # [BR, BW, K_out]
+  ident = _identity_scalar(reduce_kind, out_dtype)
+  r = jnp.where(valid[..., None], r, ident)
+
+  partial_y = _AXIS_RED[reduce_kind](r, axis=1)            # [BR, K_out]
+  y_ref[...] = _COMBINE[reduce_kind](y_ref[...], partial_y)
+  partial_recv = jnp.any(valid, axis=1).astype(jnp.int8)   # [BR]
+  recv_ref[...] = jnp.maximum(recv_ref[...], partial_recv)
+
+
+def _pick_block(total: int, target: int, multiple: int) -> int:
+  """Largest divisor of ``total`` that is ≤ target and a multiple of
+  ``multiple`` (falls back to total)."""
+  best = total
+  for cand in range(multiple, min(target, total) + 1, multiple):
+    if total % cand == 0:
+      best = cand
+  return best if total % best == 0 else total
+
+
+def ell_spmv_pallas(
+    cols: Array, vals: Array, mask: Array, msg: Array, active: Array,
+    dprop: Array, *, process: Callable, reduce_kind: str,
+    out_dtype=None, out_k: Optional[int] = None,
+    block_rows: Optional[int] = None, block_slots: Optional[int] = None,
+    interpret: Optional[bool] = None) -> Tuple[Array, Array]:
+  """Generalized ELL SpMV.
+
+  Args:
+    cols: int32[n_pad, W] packed source indices.
+    vals: [n_pad, W] edge values.
+    mask: int8/bool[n_pad, W] slot validity.
+    msg:  [n_src, K] message payloads (K=1 for scalar programs).
+    active: int8/bool[n_src].
+    dprop: [n_pad, Kd] destination properties, already row-permuted.
+    process: (m[...,K], e[...], d[...,Kd]) -> r[..., K_out]; traced inline.
+    reduce_kind: add | min | max.
+  Returns:
+    (y[n_pad, K_out], recv int8[n_pad]).
+  """
+  n_pad, w = cols.shape
+  n_src, k = msg.shape
+  if out_dtype is None or out_k is None:
+    probe = jax.eval_shape(
+        lambda m, e, d: process(m, e, d),
+        jax.ShapeDtypeStruct((1, 1, k), msg.dtype),
+        jax.ShapeDtypeStruct((1, 1), vals.dtype),
+        jax.ShapeDtypeStruct((1, 1, dprop.shape[1]), dprop.dtype))
+    out_dtype = out_dtype or probe.dtype
+    out_k = out_k or probe.shape[-1]
+  if interpret is None:
+    interpret = jax.default_backend() != "tpu"
+
+  br = block_rows or _pick_block(n_pad, 256, 8)
+  bw = block_slots or _pick_block(w, 512, 8)
+  grid = (n_pad // br, w // bw)
+
+  kern = functools.partial(
+      _kernel, process=process, reduce_kind=reduce_kind, out_dtype=out_dtype)
+  y, recv = pl.pallas_call(
+      kern,
+      grid=grid,
+      in_specs=[
+          pl.BlockSpec((br, bw), lambda i, j: (i, j)),      # cols
+          pl.BlockSpec((br, bw), lambda i, j: (i, j)),      # vals
+          pl.BlockSpec((br, bw), lambda i, j: (i, j)),      # mask
+          pl.BlockSpec((n_src, k), lambda i, j: (0, 0)),    # msg (resident)
+          pl.BlockSpec((n_src,), lambda i, j: (0,)),        # active
+          pl.BlockSpec((br, dprop.shape[1]), lambda i, j: (i, 0)),  # dprop
+      ],
+      out_specs=[
+          pl.BlockSpec((br, out_k), lambda i, j: (i, 0)),
+          pl.BlockSpec((br,), lambda i, j: (i,)),
+      ],
+      out_shape=[
+          jax.ShapeDtypeStruct((n_pad, out_k), out_dtype),
+          jax.ShapeDtypeStruct((n_pad,), jnp.int8),
+      ],
+      interpret=interpret,
+  )(cols, vals, mask.astype(jnp.int8), msg, active.astype(jnp.int8), dprop)
+  return y, recv

@@ -1,0 +1,77 @@
+"""Jitted wrappers bridging :mod:`repro.core` to the Pallas kernels."""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph as graphlib
+from repro.core.spmv import _tree_where, _unpermute, spmv_coo
+from repro.core.vertex_program import GraphProgram
+from repro.kernels.ell_spmv import ell_spmv_pallas
+
+Array = jax.Array
+PyTree = Any
+
+
+def spmv_ell_pallas(g: graphlib.EllGraph, msg: PyTree, active: Array,
+                    dst_prop: PyTree, program: GraphProgram,
+                    **kernel_kwargs) -> Tuple[PyTree, Array]:
+  """Drop-in replacement for :func:`repro.core.spmv.spmv_ell` that routes the
+  packed-ELL portion through the Pallas kernel (spill still folds via COO).
+
+  Restrictions (enforced by ``spmv._pallas_eligible`` / asserted here):
+  single-leaf scalar-or-vector messages, fast-path reductions.
+  """
+  msg_leaves, msg_def = jax.tree_util.tree_flatten(msg)
+  assert len(msg_leaves) == 1, "pallas path: single-leaf messages only"
+  m = msg_leaves[0]
+  scalar_msg = m.ndim == 1
+  m2 = m[:, None] if scalar_msg else m
+
+  if program.process_reads_dst:
+    dp_leaves = jax.tree_util.tree_leaves(dst_prop)
+    assert len(dp_leaves) == 1, "pallas path: single-leaf dst_prop only"
+    dp = dp_leaves[0]
+    scalar_dp = dp.ndim == 1
+    dpp = dp[jnp.minimum(g.row_of, g.n - 1)]
+    dpp = dpp[:, None] if scalar_dp else dpp
+  else:
+    scalar_dp = True
+    dpp = jnp.zeros((g.cols.shape[0], 1), m2.dtype)
+
+  user_process = program.process_message
+
+  # Probe the per-edge result rank: scalar results need a trailing unit dim
+  # inside the kernel and a squeeze outside.
+  probe = jax.eval_shape(
+      user_process,
+      jax.ShapeDtypeStruct(m.shape[1:], m.dtype),
+      jax.ShapeDtypeStruct((), g.vals.dtype),
+      jax.ShapeDtypeStruct(dpp.shape[1:] if not scalar_dp else (), dpp.dtype))
+  scalar_result = probe.ndim == 0
+
+  def process(mb, eb, db):
+    # mb [BR, BW, K], eb [BR, BW], db [BR, BW, Kd] -> r [BR, BW, K_out]
+    m_in = mb[..., 0] if scalar_msg else mb
+    d_in = db[..., 0] if scalar_dp else db
+    r = user_process(m_in, eb, d_in)
+    return r[..., None] if scalar_result else r
+
+  y2, recv_i8 = ell_spmv_pallas(
+      g.cols, g.vals, g.mask, m2, active, dpp,
+      process=process, reduce_kind=program.reduce_kind, **kernel_kwargs)
+  y_packed_leaf = y2[..., 0] if scalar_result else y2
+  y_packed = jax.tree_util.tree_unflatten(msg_def, [y_packed_leaf])
+  recv_packed = recv_i8 != 0
+
+  ident = program.identity_like(y_packed)
+  y, recv = _unpermute(g, y_packed, recv_packed, ident)
+  if g.spill is not None:
+    y_s, recv_s = spmv_coo(g.spill, msg, active, dst_prop, program)
+    red = program.reduce_fn()
+    y = _tree_where(recv_s, _tree_where(recv, red(y, y_s), y_s), y)
+    recv = recv | recv_s
+  return y, recv

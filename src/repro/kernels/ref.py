@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (independent of repro.core)."""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_AXIS_RED = {"add": jnp.sum, "min": jnp.min, "max": jnp.max}
+
+
+def _identity_scalar(kind: str, dtype):
+  if kind == "add":
+    return jnp.zeros((), dtype)
+  if kind == "min":
+    return (jnp.array(jnp.inf, dtype) if jnp.issubdtype(dtype, jnp.floating)
+            else jnp.array(jnp.iinfo(dtype).max, dtype))
+  if kind == "max":
+    return (jnp.array(-jnp.inf, dtype) if jnp.issubdtype(dtype, jnp.floating)
+            else jnp.array(jnp.iinfo(dtype).min, dtype))
+  raise ValueError(kind)
+
+
+def ell_spmv_ref(cols: Array, vals: Array, mask: Array, msg: Array,
+                 active: Array, dprop: Array, *, process: Callable,
+                 reduce_kind: str) -> Tuple[Array, Array]:
+  """Oracle for :func:`repro.kernels.ell_spmv.ell_spmv_pallas`.
+
+  Same contract: msg [n_src, K], dprop [n_pad, Kd] pre-permuted, returns
+  (y [n_pad, K_out], recv int8[n_pad]).
+  """
+  n_pad, w = cols.shape
+  m = msg[cols]                                    # [n_pad, W, K]
+  a = active.astype(bool)[cols]
+  valid = mask.astype(bool) & a
+  dp = jnp.broadcast_to(dprop[:, None, :], (n_pad, w, dprop.shape[1]))
+  r = process(m, vals, dp)
+  ident = _identity_scalar(reduce_kind, r.dtype)
+  r = jnp.where(valid[..., None], r, ident)
+  y = _AXIS_RED[reduce_kind](r, axis=1)
+  recv = jnp.any(valid, axis=1).astype(jnp.int8)
+  return y, recv

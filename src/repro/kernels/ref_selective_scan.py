@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the selective-scan kernel: naive time recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def selective_scan_ref(u: Array, dt: Array, a: Array, bmat: Array,
+                       cmat: Array) -> Array:
+  """Sequential reference.  Shapes as in selective_scan_pallas."""
+  b, s, c = u.shape
+  n = bmat.shape[-1]
+
+  def step(h, inp):
+    u_t, dt_t, b_t, c_t = inp                  # [B,C],[B,C],[B,N],[B,N]
+    a_bar = jnp.exp(dt_t[..., None] * a[None])          # [B,C,N]
+    bu = (dt_t * u_t)[..., None] * b_t[:, None, :]
+    h = a_bar * h + bu
+    y = jnp.sum(h * c_t[:, None, :], axis=-1)           # [B,C]
+    return h, y
+
+  h0 = jnp.zeros((b, c, n), jnp.float32)
+  xs = (u.swapaxes(0, 1).astype(jnp.float32),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+        bmat.swapaxes(0, 1).astype(jnp.float32),
+        cmat.swapaxes(0, 1).astype(jnp.float32))
+  _, ys = jax.lax.scan(step, h0, xs)
+  return ys.swapaxes(0, 1)

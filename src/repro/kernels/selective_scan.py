@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused Mamba-1 selective scan (forward).
+
+WHY (§Perf hillclimb 1): the pure-XLA chunked associative scan materializes
+the discretized tensors ``a_bar``/``bu`` of shape [B,S,C,N] in HBM and
+streams the full volume ~50× per layer (log-depth combine passes + their
+transpose in the backward) — the roofline memory term for falcon-mamba-7b
+train/prefill is ~400× the compute term.  This kernel is the TPU analogue
+of the CUDA selective-scan in the Mamba paper: the state ``h[Ct,N]`` lives
+in a VMEM scratch register across sequence chunks, the discretization is
+computed on the fly in VMEM, and HBM sees only the layer inputs and ``y``:
+
+    HBM bytes/layer:  ~5 · B·S·C · 4  (vs ~50 · B·S·C·N·4 for the XLA scan)
+    → ~160× fewer bytes at N=16.
+
+Grid: (B, C/Ct, S/Sc) with the sequence axis iterated sequentially
+("arbitrary" semantics) so the scratch state carries across chunks.
+Forward-only: decode uses the O(1) recurrence; training keeps the XLA scan
+(a paired backward kernel with chunk-boundary checkpoints is the documented
+next step in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+            seq_chunk: int):
+  s = pl.program_id(2)
+
+  @pl.when(s == 0)
+  def _init():
+    h_ref[...] = jnp.zeros_like(h_ref)
+
+  u = u_ref[0]                    # [Sc, Ct]
+  dt = dt_ref[0]                  # [Sc, Ct]
+  bm = b_ref[0]                   # [Sc, N]
+  cm = c_ref[0]                   # [Sc, N]
+  a = a_ref[...]                  # [Ct, N]
+
+  def step(t, h):
+    la = dt[t][:, None] * a                          # [Ct, N]
+    a_bar = jnp.exp(la)
+    bu = (dt[t] * u[t])[:, None] * bm[t][None, :]    # [Ct, N]
+    h = a_bar * h + bu
+    y_ref[0, t, :] = jnp.sum(h * cm[t][None, :], axis=1)
+    return h
+
+  h = jax.lax.fori_loop(0, seq_chunk, step, h_ref[...])
+  h_ref[...] = h
+
+
+def selective_scan_pallas(u: Array, dt: Array, a: Array, bmat: Array,
+                          cmat: Array, *, seq_chunk: int = 256,
+                          c_tile: int = 128,
+                          interpret: Optional[bool] = None) -> Array:
+  """u,dt [B,S,C] f32; a [C,N] (negative); bmat,cmat [B,S,N] f32 -> y [B,S,C].
+
+  y_t = C_t · h_t with h_t = exp(dt_t·A)·h_{t-1} + dt_t·B_t·u_t.
+  """
+  b, s, c = u.shape
+  n = bmat.shape[-1]
+  if interpret is None:
+    interpret = jax.default_backend() != "tpu"
+  seq_chunk = min(seq_chunk, s)
+  c_tile = min(c_tile, c)
+  assert s % seq_chunk == 0 and c % c_tile == 0
+  grid = (b, c // c_tile, s // seq_chunk)
+
+  kern = functools.partial(_kernel, seq_chunk=seq_chunk)
+  y = pl.pallas_call(
+      kern,
+      grid=grid,
+      in_specs=[
+          pl.BlockSpec((1, seq_chunk, c_tile), lambda i, j, k: (i, k, j)),
+          pl.BlockSpec((1, seq_chunk, c_tile), lambda i, j, k: (i, k, j)),
+          pl.BlockSpec((c_tile, n), lambda i, j, k: (j, 0)),
+          pl.BlockSpec((1, seq_chunk, n), lambda i, j, k: (i, k, 0)),
+          pl.BlockSpec((1, seq_chunk, n), lambda i, j, k: (i, k, 0)),
+      ],
+      out_specs=pl.BlockSpec((1, seq_chunk, c_tile),
+                             lambda i, j, k: (i, k, j)),
+      out_shape=jax.ShapeDtypeStruct((b, s, c), jnp.float32),
+      scratch_shapes=[_vmem_scratch((c_tile, n), jnp.float32)],
+      interpret=interpret,
+  )(u.astype(jnp.float32), dt.astype(jnp.float32), a.astype(jnp.float32),
+    bmat.astype(jnp.float32), cmat.astype(jnp.float32))
+  return y
+
+
+def _vmem_scratch(shape, dtype):
+  try:
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+  except Exception:  # pragma: no cover
+    import jax
+    return jax.ShapeDtypeStruct(shape, dtype)

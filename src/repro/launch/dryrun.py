@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-touching import: jax locks the device count at init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, with zero device allocation:
+  * ``compiled.memory_analysis()``  — proves the cell fits per-device HBM,
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline,
+  * a collective-traffic table parsed from the optimized HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute operand bytes — cost_analysis does not report them).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.launch import specs as S
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models.common import param_shapes
+from repro.models.transformer import build_model
+from repro.serve.engine import make_decode_step, make_prefill
+from repro.train.steps import make_train_step
+
+TP = 16  # fixed "model" axis extent of the production meshes
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>[^=]*?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+  total = 0
+  for dt, dims in _SHAPE_RE.findall(text):
+    n = 1
+    if dims:
+      for d in dims.split(","):
+        if d:
+          n *= int(d)
+    total += n * _BYTES[dt]
+  return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+  """Per collective kind: op count, summed *output* bytes (full-module,
+  i.e. per-device), and the replica-group size histogram.
+
+  HLO line shape sits between '=' and the op name:
+      %x = f32[16,4096,2048]{2,1,0} all-reduce(...), replica_groups=[16,16]…
+  """
+  out: Dict[str, Dict[str, Any]] = {}
+  for line in hlo_text.splitlines():
+    m = _OP_RE.search(line)
+    if not m:
+      continue
+    kind = m.group("kind")
+    byts = _shape_bytes(m.group("shapes"))
+    rec = out.setdefault(kind, {"count": 0, "bytes": 0.0, "groups": {}})
+    rec["count"] += 1
+    rec["bytes"] += byts
+    g = _GROUPS_RE.search(line)
+    gsize = int(g.group(2)) if g else 0
+    rec["groups"][str(gsize)] = rec["groups"].get(str(gsize), 0) + 1
+  return out
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool, *,
+               unroll: bool = False, cfg_overrides: Optional[dict] = None,
+               cache_layout: str = "head", fsdp: bool = True,
+               serve_dtype: Optional[str] = None):
+  """Returns (jitted_fn, example_args, meta) — ready for .lower().
+
+  ``unroll=True`` unrolls layer scans so cost_analysis / collective counts
+  are exact (XLA counts a while body once); used by the roofline pass.
+  """
+  import dataclasses as _dc
+  cfg = C.get_config(arch)
+  if unroll:
+    cfg = _dc.replace(cfg, scan_unroll=True)
+  if cfg_overrides:
+    cfg = _dc.replace(cfg, **cfg_overrides)
+  shp = C.SHAPES[shape]
+  if not C.shape_supported(cfg, shape):
+    raise SkipCell(f"{arch}×{shape}: needs sub-quadratic attention "
+                   f"(family={cfg.family}) — skipped per DESIGN.md §5")
+  if cfg.family == "encdec" and shape == "long_500k":
+    raise SkipCell(f"{arch}×{shape}: enc-dec full attention — skipped")
+  mesh = make_production_mesh(multi_pod=multi_pod)
+  dp_axes = data_axes(multi_pod)
+  dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+  dp = S._dp(dp_axes)
+  model = build_model(cfg, tp=TP, dp_spec=dp)
+  defs = model.defs()
+  if shp["kind"] == "train" and fsdp:
+    # ZeRO/FSDP: params + optimizer moments sharded over the data axes too.
+    defs = S.fsdp_defs(defs, dp_axes, dp_size)
+  if shp["kind"] != "train" and serve_dtype:
+    # Serving reads every weight per step; bf16 deployment weights halve
+    # the per-token parameter traffic vs f32 masters (§Perf).
+    from repro.models.common import ParamDef, is_param_def
+    sdt = jnp.dtype(serve_dtype)
+    defs = jax.tree_util.tree_map(
+        lambda d: ParamDef(d.shape, d.pspec, sdt, d.init, d.scale),
+        defs, is_leaf=is_param_def)
+  p_shapes = param_shapes(defs)
+  p_specs = S.named(mesh, jax.tree_util.tree_map(
+      lambda d: d.pspec, defs,
+      is_leaf=lambda x: hasattr(x, "pspec")))
+
+  B, L = shp["global_batch"], shp["seq_len"]
+  kind = shp["kind"]
+
+  if kind == "train":
+    step = make_train_step(model)
+    opt_shapes = S.opt_state_shapes(defs)
+    opt_specs = S.named(mesh, S.opt_state_pspecs(defs))
+    b_shapes, b_pspecs = S.batch_specs(cfg, B, L, dp_axes, dp_size,
+                                       with_labels=True)
+    b_specs = S.named(mesh, b_pspecs)
+    fn = jax.jit(step,
+                 in_shardings=(p_specs, opt_specs, b_specs),
+                 out_shardings=(p_specs, opt_specs, None),
+                 donate_argnums=(0, 1))
+    args = (p_shapes, opt_shapes, b_shapes)
+  elif kind == "prefill":
+    fn0 = make_prefill(model)
+    b_shapes, b_pspecs = S.batch_specs(cfg, B, L, dp_axes, dp_size,
+                                       with_labels=False)
+    b_specs = S.named(mesh, b_pspecs)
+    out_spec = NamedSharding(mesh, P(dp if B % dp_size == 0 else None,
+                                     None, "model"))
+    fn = jax.jit(fn0, in_shardings=(p_specs, b_specs),
+                 out_shardings=out_spec)
+    args = (p_shapes, b_shapes)
+  elif kind == "decode":
+    step0 = make_decode_step(model)
+    cache_shapes = model.init_cache(B, L, abstract=True)
+    cache_pspecs = S.cache_pspecs(cfg, B, dp_axes, dp_size, TP,
+                                  layout=cache_layout)
+    cache_specs = S.named(mesh, cache_pspecs)
+    dp_or_none = dp if (B % dp_size == 0 and B >= dp_size) else None
+    tok_spec = NamedSharding(mesh, P(dp_or_none, None))
+    logit_spec = NamedSharding(mesh, P(dp_or_none, None, "model"))
+    fn = jax.jit(step0,
+                 in_shardings=(p_specs, tok_spec, cache_specs, None),
+                 out_shardings=(logit_spec, cache_specs),
+                 donate_argnums=(2,))
+    args = (p_shapes, S.sds((B, 1), jnp.int32), cache_shapes,
+            S.sds((), jnp.int32))
+  else:
+    raise ValueError(kind)
+  meta = dict(arch=arch, shape=shape, kind=kind, batch=B, seq=L,
+              multi_pod=multi_pod, devices=int(np.prod(mesh.devices.shape)),
+              family=cfg.family)
+  return fn, args, mesh, meta
+
+
+class SkipCell(Exception):
+  pass
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             save_hlo: Optional[str] = None, *, unroll: bool = False,
+             cfg_overrides: Optional[dict] = None,
+             cache_layout: str = "head", fsdp: bool = True,
+             serve_dtype: Optional[str] = None) -> Dict[str, Any]:
+  t0 = time.time()
+  fn, args, mesh, meta = build_cell(arch, shape, multi_pod, unroll=unroll,
+                                    cfg_overrides=cfg_overrides,
+                                    cache_layout=cache_layout, fsdp=fsdp,
+                                    serve_dtype=serve_dtype)
+  meta["fsdp"] = fsdp
+  meta["serve_dtype"] = serve_dtype
+  meta["unroll"] = unroll
+  meta["cache_layout"] = cache_layout
+  meta["cfg_overrides"] = cfg_overrides or {}
+  with jax.set_mesh(mesh):
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+  mem = compiled.memory_analysis()
+  cost = compiled.cost_analysis()
+  hlo = compiled.as_text()
+  # Trip-count-aware accounting (XLA counts while bodies once; see
+  # repro.analysis.hlo_cost).  Validated vs unrolled cost_analysis.
+  from repro.analysis.hlo_cost import analyze as hlo_analyze
+  acc = hlo_analyze(hlo)
+  rec = dict(meta)
+  rec.update(
+      lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+      flops=float(acc["flops"]),
+      bytes_accessed=float(acc["bytes"]),
+      transcendentals=float(acc["transcendentals"]),
+      collectives=acc["collectives"],
+      collective_bytes=sum(v["bytes"] for v in acc["collectives"].values()),
+      xla_flops=float(cost.get("flops", -1.0)) if cost else -1.0,
+      xla_bytes=float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+  )
+  if mem is not None:
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+      v = getattr(mem, k, None)
+      if v is not None:
+        rec[k] = int(v)
+  if save_hlo:
+    with open(save_hlo, "w") as f:
+      f.write(hlo)
+  return rec
+
+
+def main(argv=None) -> int:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", default=None)
+  ap.add_argument("--shape", default=None, choices=list(C.SHAPES) + [None])
+  ap.add_argument("--all", action="store_true")
+  ap.add_argument("--multi-pod", default="single",
+                  choices=["single", "multi", "both"])
+  ap.add_argument("--out", default=None, help="directory for JSON records")
+  ap.add_argument("--save-hlo", default=None)
+  ap.add_argument("--unroll", action="store_true",
+                  help="unroll layer scans (exact roofline accounting)")
+  ap.add_argument("--cache-layout", default="head", choices=["head", "seq"])
+  ap.add_argument("--no-fsdp", action="store_true",
+                  help="disable ZeRO/FSDP param+optimizer sharding")
+  ap.add_argument("--serve-dtype", default=None,
+                  help="deployment weight dtype for prefill/decode cells")
+  ap.add_argument("--override", action="append", default=[],
+                  help="cfg override key=value (repeatable)")
+  args = ap.parse_args(argv)
+  overrides = {}
+  for kv in args.override:
+    k, v = kv.split("=", 1)
+    if v in ("true", "false", "True", "False"):
+      v = v in ("true", "True")
+    elif v.isdigit():
+      v = int(v)
+    else:
+      try:
+        v = float(v)
+      except ValueError:
+        pass
+    overrides[k] = v
+
+  cells = []
+  archs = C.ARCHITECTURES if (args.all or not args.arch) else [args.arch]
+  shapes = list(C.SHAPES) if (args.all or not args.shape) else [args.shape]
+  pods = {"single": [False], "multi": [True], "both": [False, True]}[
+      args.multi_pod]
+  for arch in archs:
+    for shape in shapes:
+      for mp in pods:
+        cells.append((arch, shape, mp))
+
+  failures = 0
+  for arch, shape, mp in cells:
+    tag = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+    try:
+      rec = run_cell(arch, shape, mp, save_hlo=args.save_hlo,
+                     unroll=args.unroll, cache_layout=args.cache_layout,
+                     cfg_overrides=overrides or None, fsdp=not args.no_fsdp,
+                     serve_dtype=args.serve_dtype)
+      print(f"[OK] {tag}: flops={rec['flops']:.3e} "
+            f"coll={rec['collective_bytes']:.3e}B "
+            f"lower={rec['lower_s']}s compile={rec['compile_s']}s",
+            flush=True)
+      if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        fname = tag.replace("|", "__").replace(".", "_") + ".json"
+        with open(os.path.join(args.out, fname), "w") as f:
+          json.dump(rec, f, indent=1)
+    except SkipCell as e:
+      print(f"[SKIP] {tag}: {e}", flush=True)
+    except Exception:
+      failures += 1
+      print(f"[FAIL] {tag}:\n{traceback.format_exc()}", flush=True)
+  return 1 if failures else 0
+
+
+if __name__ == "__main__":
+  sys.exit(main())

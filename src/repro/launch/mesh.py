@@ -1,0 +1,23 @@
+"""Production mesh construction (function, not module-level constant — the
+import must never touch jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+  """16×16 (one 256-chip pod) or 2×16×16 (two pods, 512 chips).
+
+  Axes: "pod" — DCN-connected pod replicas (pure data parallel),
+  "data" — in-pod data/FSDP axis, "model" — tensor/expert axis.
+  """
+  shape = (2, 16, 16) if multi_pod else (16, 16)
+  axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+  return jax.make_mesh(
+      shape, axes,
+      axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(multi_pod: bool):
+  return ("pod", "data") if multi_pod else ("data",)

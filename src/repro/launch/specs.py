@@ -1,0 +1,178 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch × shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins — no device
+allocation — for the step function of each shape kind:
+
+  train_*   -> train_step(params, opt_state, batch)
+  prefill_* -> prefill(params, batch)
+  decode_*  -> decode_step(params, token, cache, pos)   (ONE new token vs a
+               ``seq_len`` KV cache / SSM state, per the assignment)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import param_shapes, param_pspecs
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+from repro.models import ssm as ssmlib
+from repro.train.optimizer import AdamWState
+
+Array = jax.Array
+PyTree = Any
+
+
+def sds(shape, dtype):
+  return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dp(dp_axes) -> Any:
+  """PartitionSpec entry for the data axes (axis name or tuple)."""
+  return dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int, dp_axes,
+                dp_size: int, *, with_labels: bool
+                ) -> Tuple[Dict[str, Any], Dict[str, P]]:
+  """(ShapeDtypeStructs, PartitionSpecs) for a data batch."""
+  dp = _dp(dp_axes) if batch % dp_size == 0 and batch >= dp_size else None
+  shapes: Dict[str, Any] = {}
+  specs: Dict[str, P] = {}
+  if cfg.family == "vlm":
+    fs = cfg.frontend_seq
+    shapes["tokens"] = sds((batch, seq - fs), jnp.int32)
+    specs["tokens"] = P(dp, None)
+    shapes["vision_embeds"] = sds((batch, fs, cfg.d_model), jnp.float32)
+    specs["vision_embeds"] = P(dp, None, None)
+  else:
+    shapes["tokens"] = sds((batch, seq), jnp.int32)
+    specs["tokens"] = P(dp, None)
+  if cfg.family == "encdec":
+    shapes["enc_frames"] = sds((batch, cfg.encoder_seq, cfg.d_model),
+                               jnp.float32)
+    specs["enc_frames"] = P(dp, None, None)
+  if with_labels:
+    shapes["labels"] = sds((batch, seq), jnp.int32)
+    specs["labels"] = P(dp, None)
+  return shapes, specs
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, dp_axes, dp_size: int,
+                 tp: int, layout: str = "seq") -> PyTree:
+  """PartitionSpecs matching Model.init_cache structure.
+
+  ``layout``:
+    * "head" (baseline) — shard kv heads on "model" when divisible, else
+      shard head_dim (GQA) / the latent dim (MLA).  Contracting a sharded
+      feature dim makes SPMD all-gather the cache or psum big score tensors.
+    * "seq" (§Perf hillclimb 2) — when heads don't shard, put "model" on the
+      *sequence* axis instead: scores/softmax/context stay T-sharded and
+      only tiny [B,1,H,·] partials cross devices (flash-decode via GSPMD).
+  """
+  dp = _dp(dp_axes) if batch % dp_size == 0 and batch >= dp_size else None
+  seq_extra = None if dp is not None else _dp(dp_axes)  # B=1 -> seq on data
+  fam = cfg.family
+
+  def t_axes(use_model: bool):
+    axes = []
+    if seq_extra is not None:
+      axes.extend(dp_axes)
+    if use_model:
+      axes.append("model")
+    if not axes:
+      return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+  kv_shardable = bool(cfg.num_kv_heads) and cfg.num_kv_heads % tp == 0
+  if fam in ("dense", "moe", "vlm"):
+    if cfg.use_mla:
+      if layout == "seq":
+        return {"c_kv": P(None, dp, t_axes(True), None),
+                "k_rope": P(None, dp, t_axes(True), None)}
+      return {"c_kv": P(None, dp, t_axes(False), "model"),
+              "k_rope": P(None, dp, t_axes(False), None)}
+    if kv_shardable:
+      return {"k": P(None, dp, t_axes(False), "model", None),
+              "v": P(None, dp, t_axes(False), "model", None)}
+    if layout == "seq":
+      return {"k": P(None, dp, t_axes(True), None, None),
+              "v": P(None, dp, t_axes(True), None, None)}
+    return {"k": P(None, dp, t_axes(False), None, "model"),
+            "v": P(None, dp, t_axes(False), None, "model")}
+  if fam == "ssm":
+    return {"conv": P(None, dp, None, "model"),
+            "h": P(None, dp, "model", None)}
+  # Attention caches of hybrid/encdec families reuse the GQA rules.
+  if kv_shardable:
+    attn_kv = dict(t=t_axes(False), kvh="model", hdx=None)
+  elif layout == "seq":
+    attn_kv = dict(t=t_axes(True), kvh=None, hdx=None)
+  else:
+    attn_kv = dict(t=t_axes(False), kvh=None, hdx="model")
+  if fam == "hybrid":
+    # conv channels = d_inner + 2*ssm_state — divisible by 16 for zamba2.
+    out = {"segments": {"conv": P(None, None, dp, None, "model"),
+                        "h": P(None, None, dp, "model", None, None)},
+           "shared": {"k": P(None, dp, attn_kv["t"], attn_kv["kvh"],
+                             attn_kv["hdx"]),
+                      "v": P(None, dp, attn_kv["t"], attn_kv["kvh"],
+                             attn_kv["hdx"])}}
+    seg, per, tail = Model(cfg, tp)._hybrid_split()
+    if tail:
+      out["tail"] = {"conv": P(None, dp, None, "model"),
+                     "h": P(None, dp, "model", None, None)}
+    return out
+  if fam == "encdec":
+    kv = P(None, dp, attn_kv["t"], attn_kv["kvh"], attn_kv["hdx"])
+    cross = P(None, dp, None, attn_kv["kvh"], attn_kv["hdx"])
+    return {"k": kv, "v": kv, "ck": cross, "cv": cross}
+  raise ValueError(fam)
+
+
+def fsdp_defs(defs: PyTree, dp_axes, dp_size: int) -> PyTree:
+  """ZeRO/FSDP: additionally shard each parameter (and, via the derived opt
+  specs, its Adam moments) over the data axes.
+
+  Rule: the first dimension whose spec is unassigned (None) and whose size
+  divides the data-parallel degree takes the dp axes.  XLA/GSPMD inserts the
+  per-layer all-gather before use and reduce-scatters gradients — the
+  standard memory↔bandwidth FSDP trade (overlappable by the latency-hiding
+  scheduler on TPU).  Small params (norms, biases) stay replicated.
+  """
+  from repro.models.common import ParamDef, is_param_def
+  dp = _dp(dp_axes)
+
+  def shard(d: ParamDef) -> ParamDef:
+    if len(d.shape) < 2:          # tiny: norms/biases
+      return d
+    specs = list(d.pspec) + [None] * (len(d.shape) - len(d.pspec))
+    for i, (dim, sp) in enumerate(zip(d.shape, specs)):
+      if sp is None and dim % dp_size == 0 and dim >= dp_size:
+        specs[i] = dp
+        return ParamDef(d.shape, P(*specs), d.dtype, d.init, d.scale)
+    return d
+
+  return jax.tree_util.tree_map(
+      shard, defs, is_leaf=is_param_def)
+
+
+def opt_state_pspecs(defs: PyTree) -> AdamWState:
+  like = param_pspecs(defs)
+  return AdamWState(step=P(), mu=like, nu=like)
+
+
+def opt_state_shapes(defs: PyTree) -> AdamWState:
+  like = param_shapes(defs)
+  return AdamWState(step=sds((), jnp.int32), mu=like, nu=like)
+
+
+def named(mesh: Mesh, tree: PyTree) -> PyTree:
+  return jax.tree_util.tree_map(
+      lambda spec: NamedSharding(mesh, spec), tree,
+      is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,4 @@
+"""LM model substrate for the assigned architectures (DESIGN.md §5)."""
+
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model_zoo import build_model  # noqa: F401

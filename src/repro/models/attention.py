@@ -1,0 +1,369 @@
+"""Attention variants: GQA (+QKV-bias, +sliding-window) and MLA (DeepSeek-V2).
+
+All sequence-level attention uses a **chunked online-softmax** (flash-style)
+implementation in pure JAX: ``lax.scan`` over KV chunks with running
+(max, denom, acc).  This keeps peak memory O(S·chunk) instead of O(S²) so the
+32k-prefill cells compile and fit — and it is the TPU-idiomatic formulation
+(the Pallas flash kernel would share this exact structure; the dry-run must
+lower on the CPU host platform, where interpret-mode Pallas would pollute the
+HLO, so the model path stays pure-JAX — DESIGN.md §8).
+
+Sharding: Q heads are padded to a multiple of the tensor-parallel degree and
+sharded on "model"; KV-projections whose head count doesn't divide the mesh
+stay replicated (GQA KV tensors are small).  MLA caches the *compressed*
+c_kv/k_rope and uses the weight-absorption trick for decode.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (ParamDef, apply_rope, out_proj_einsum,
+                                 rms_norm)
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+
+def causal_swa_mask(q_pos: Array, k_pos: Array, window: int,
+                    causal: bool = True) -> Array:
+  """bool[..., Q, K]: True = attend.  window=0 -> plain causal (or full)."""
+  q = q_pos[..., :, None]
+  k = k_pos[..., None, :]
+  ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+  if causal:
+    ok = ok & (k <= q)
+  if window > 0:
+    ok = ok & (k > q - window)
+  return ok
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention core
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q: Array, k: Array, v: Array, q_pos: Array,
+                      k_pos: Array, *, window: int = 0, causal: bool = True,
+                      kv_chunk: int = 1024, scale: Optional[float] = None
+                      ) -> Array:
+  """q [B,S,H,D], k/v [B,T,H,D] (already head-aligned), -> [B,S,H,D].
+
+  Online softmax over KV chunks; numerically identical (up to fp assoc.) to
+  full softmax(QKᵀ)V with the causal/SWA mask applied.
+  """
+  b, s, h, d = q.shape
+  t = k.shape[1]
+  scale = scale if scale is not None else 1.0 / math.sqrt(d)
+  kv_chunk = min(kv_chunk, t)
+  if t % kv_chunk:
+    pad = kv_chunk - t % kv_chunk
+    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_pos = jnp.pad(k_pos, ((0, pad),), constant_values=2**30)
+    t = t + pad
+  n_chunks = t // kv_chunk
+
+  qf = (q * scale).astype(jnp.float32)
+  kc = k.reshape(b, n_chunks, kv_chunk, h, d)
+  vc = v.reshape(b, n_chunks, kv_chunk, h, d)
+  kpc = k_pos.reshape(n_chunks, kv_chunk)
+
+  def step(carry, inp):
+    m, l, acc = carry                     # [B,S,H], [B,S,H], [B,S,H,D]
+    kb, vb, kp = inp                      # [B,C,H,D], [B,C,H,D], [C]
+    sc = jnp.einsum("bshd,bchd->bshc", qf, kb.astype(jnp.float32))
+    mask = causal_swa_mask(q_pos, kp, window, causal)   # [S, C]
+    sc = jnp.where(mask[None, :, None, :], sc, NEG_INF)  # [B,S,H,C]
+    m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+    p = jnp.exp(sc - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bshc,bchd->bshd", p, vb.astype(jnp.float32))
+    return (m_new, l_new, acc_new), None
+
+  m0 = jnp.full((b, s, h), NEG_INF, jnp.float32)
+  l0 = jnp.zeros((b, s, h), jnp.float32)
+  a0 = jnp.zeros((b, s, h, d), jnp.float32)
+  (m, l, acc), _ = jax.lax.scan(
+      step, (m0, l0, a0),
+      (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kpc))
+  out = acc / jnp.maximum(l[..., None], 1e-30)
+  return out.astype(q.dtype)
+
+
+def dense_attention(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                    *, window: int = 0, causal: bool = True,
+                    scale: Optional[float] = None) -> Array:
+  """Unchunked reference / decode path (S small)."""
+  d = q.shape[-1]
+  scale = scale if scale is not None else 1.0 / math.sqrt(d)
+  sc = jnp.einsum("bshd,bthd->bsht",
+                  (q * scale).astype(jnp.float32), k.astype(jnp.float32))
+  mask = causal_swa_mask(q_pos, k_pos, window, causal)
+  sc = jnp.where(mask[None, :, None, :], sc, NEG_INF)
+  p = jax.nn.softmax(sc, axis=-1)
+  out = jnp.einsum("bsht,bthd->bshd", p, v.astype(jnp.float32))
+  return out.astype(q.dtype)
+
+
+def _repeat_kv(x: Array, n_rep: int) -> Array:
+  """[B,T,KV,D] -> [B,T,KV*n_rep,D] (GQA head alignment)."""
+  if n_rep == 1:
+    return x
+  b, t, kv, d = x.shape
+  return jnp.broadcast_to(x[:, :, :, None, :], (b, t, kv, n_rep, d)
+                          ).reshape(b, t, kv * n_rep, d)
+
+
+def grouped_decode_attention(q: Array, k: Array, v: Array, q_pos: Array,
+                             k_pos: Array, *, window: int = 0,
+                             scale: Optional[float] = None) -> Array:
+  """GQA decode without materializing repeated KV heads.
+
+  §Perf hillclimb 2: ``_repeat_kv``'s broadcast+reshape defeats GSPMD
+  sharding propagation on the cache — SPMD falls back to all-gathering the
+  whole KV cache in f32 (≈137 GB per decoded token for qwen2.5-32b).  The
+  grouped einsum keeps the kv-head axis intact on both operands, all
+  softmax reductions are axis-reductions (sharded-T friendly), and the
+  cache enters the dot in its storage dtype.
+
+  q [B,1,Hp,D] with Hp = KV·G; k/v [B,T,KV,D].  Returns [B,1,Hp,D].
+  """
+  b, s, hp, d = q.shape
+  kv = k.shape[2]
+  g = hp // kv
+  scale = scale if scale is not None else 1.0 / math.sqrt(d)
+  qg = (q * scale).reshape(b, s, kv, g, d)
+  sc = jnp.einsum("bskgd,btkd->bskgt", qg, k,
+                  preferred_element_type=jnp.float32)
+  mask = causal_swa_mask(q_pos, k_pos, window, True)          # [1, T]
+  sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+  m = jnp.max(sc, axis=-1, keepdims=True)
+  p = jnp.exp(sc - m)
+  l = jnp.sum(p, axis=-1, keepdims=True)
+  p = (p / jnp.maximum(l, 1e-30)).astype(v.dtype)
+  ctx = jnp.einsum("bskgt,btkd->bskgd", p, v,
+                   preferred_element_type=jnp.float32)
+  return ctx.reshape(b, s, hp, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def gqa_defs(cfg: ModelConfig, tp: int) -> Dict[str, ParamDef]:
+  d, hd = cfg.d_model, cfg.resolved_head_dim
+  hp = cfg.padded_heads(tp)
+  kv = cfg.num_kv_heads
+  kv_shardable = kv % tp == 0
+  kv_spec = P(None, "model") if kv_shardable else P(None, None)
+  defs = {
+      "wq": ParamDef((d, hp * hd), P(None, "model")),
+      "wk": ParamDef((d, kv * hd), kv_spec),
+      "wv": ParamDef((d, kv * hd), kv_spec),
+      "wo": ParamDef((hp * hd, d), P("model", None)),
+  }
+  if cfg.qkv_bias:
+    kv_bias_spec = P("model") if kv_shardable else P(None)
+    defs["bq"] = ParamDef((hp * hd,), P("model"), init="zeros")
+    defs["bk"] = ParamDef((kv * hd,), kv_bias_spec, init="zeros")
+    defs["bv"] = ParamDef((kv * hd,), kv_bias_spec, init="zeros")
+  return defs
+
+
+def gqa_qkv(params, x: Array, positions: Array, cfg: ModelConfig, tp: int
+            ) -> Tuple[Array, Array, Array]:
+  """Project + rope.  x [B,S,d] -> q [B,S,Hp,hd], k/v [B,S,KV,hd]."""
+  b, s, _ = x.shape
+  hd = cfg.resolved_head_dim
+  hp = cfg.padded_heads(tp)
+  kv = cfg.num_kv_heads
+  cd = cfg.compute_dtype
+  q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(cd))
+  k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(cd))
+  v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(cd))
+  if cfg.qkv_bias:
+    q = q + params["bq"].astype(cd)
+    k = k + params["bk"].astype(cd)
+    v = v + params["bv"].astype(cd)
+  q = q.reshape(b, s, hp, hd)
+  k = k.reshape(b, s, kv, hd)
+  v = v.reshape(b, s, kv, hd)
+  q = apply_rope(q, positions, cfg.rope_theta)
+  k = apply_rope(k, positions, cfg.rope_theta)
+  return q, k, v
+
+
+def gqa_forward(params, x: Array, positions: Array, cfg: ModelConfig,
+                tp: int, *, causal: bool = True, kv_chunk: int = 1024
+                ) -> Array:
+  """Full-sequence GQA attention (train / prefill)."""
+  q, k, v = gqa_qkv(params, x, positions, cfg, tp)
+  n_rep = cfg.padded_heads(tp) // cfg.num_kv_heads
+  k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+  out = chunked_attention(q, k, v, positions, positions,
+                          window=cfg.sliding_window, causal=causal,
+                          kv_chunk=kv_chunk)
+  b, s = x.shape[:2]
+  out = out.reshape(b, s, -1)
+  return out_proj_einsum("bsh,hd->bsd", out, params["wo"], cfg)
+
+
+def gqa_decode(params, x: Array, cache: Dict[str, Array], pos: Array,
+               cfg: ModelConfig, tp: int) -> Tuple[Array, Dict[str, Array]]:
+  """One-token decode.  x [B,1,d]; cache {"k","v": [B,T,KV,hd]}; pos scalar.
+
+  The cache is a **ring buffer**: slot = pos % T.  With T = max_seq this
+  degenerates to the plain append cache; with T = sliding_window it holds
+  exactly the SWA working set (the 500k-context Mixtral cells never
+  materialize 500k entries).  Slot positions are recovered analytically:
+  p(s) = pos - ((pos - s) mod T); negative ⇒ not yet written ⇒ masked.
+
+  Returns (out [B,1,d], updated cache)."""
+  positions = pos.reshape(1)
+  q, k, v = gqa_qkv(params, x, positions, cfg, tp)
+  t = cache["k"].shape[1]
+  slot = jnp.mod(pos, t)
+  ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+  cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+  s_idx = jnp.arange(t, dtype=jnp.int32)
+  k_pos = pos - jnp.mod(pos - s_idx, t)
+  k_pos = jnp.where(k_pos >= 0, k_pos, 2**30)  # unwritten -> masked
+  out = grouped_decode_attention(q, ck, cv, positions, k_pos,
+                                 window=cfg.sliding_window)
+  b = x.shape[0]
+  out = out.reshape(b, 1, -1)
+  out = out_proj_einsum("bsh,hd->bsd", out, params["wo"], cfg)
+  return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention, DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_defs(cfg: ModelConfig, tp: int) -> Dict[str, ParamDef]:
+  d = cfg.d_model
+  hp = cfg.padded_heads(tp)
+  qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+  defs = {
+      "wq_a": ParamDef((d, cfg.q_lora_rank), P(None, None)),
+      "q_norm": ParamDef((cfg.q_lora_rank,), P(None), init="ones"),
+      "wq_b": ParamDef((cfg.q_lora_rank, hp * qk), P(None, "model")),
+      "wkv_a": ParamDef((d, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                        P(None, None)),
+      "kv_norm": ParamDef((cfg.kv_lora_rank,), P(None), init="ones"),
+      "wk_b": ParamDef((cfg.kv_lora_rank, hp * cfg.qk_nope_head_dim),
+                       P(None, "model")),
+      "wv_b": ParamDef((cfg.kv_lora_rank, hp * cfg.v_head_dim),
+                       P(None, "model")),
+      "wo": ParamDef((hp * cfg.v_head_dim, d), P("model", None)),
+  }
+  return defs
+
+
+def _mla_q(params, x, positions, cfg: ModelConfig, tp: int):
+  cd = cfg.compute_dtype
+  b, s, _ = x.shape
+  hp = cfg.padded_heads(tp)
+  nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+  ql = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(cd))
+  ql = rms_norm(ql, params["q_norm"], cfg.norm_eps)
+  q = jnp.einsum("bsr,rh->bsh", ql, params["wq_b"].astype(cd))
+  q = q.reshape(b, s, hp, nope + rope_d)
+  q_nope, q_rope = q[..., :nope], q[..., nope:]
+  q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+  return q_nope, q_rope
+
+
+def _mla_ckv(params, x, positions, cfg: ModelConfig):
+  cd = cfg.compute_dtype
+  kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(cd))
+  c_kv, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+  c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+  k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+  return c_kv, k_rope[:, :, 0, :]
+
+
+def mla_forward(params, x: Array, positions: Array, cfg: ModelConfig,
+                tp: int, *, causal: bool = True, kv_chunk: int = 1024
+                ) -> Array:
+  """Full-sequence MLA (train / prefill): decompress K/V per chunk."""
+  cd = cfg.compute_dtype
+  b, s, _ = x.shape
+  hp = cfg.padded_heads(tp)
+  nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+  q_nope, q_rope = _mla_q(params, x, positions, cfg, tp)
+  c_kv, k_rope = _mla_ckv(params, x, positions, cfg)
+  k_nope = jnp.einsum("bsr,rh->bsh", c_kv, params["wk_b"].astype(cd)
+                      ).reshape(b, s, hp, nope)
+  v = jnp.einsum("bsr,rh->bsh", c_kv, params["wv_b"].astype(cd)
+                 ).reshape(b, s, hp, vd)
+  # Concatenate nope+rope into one score space; pad V to match Q/K head_dim
+  # shape for the shared chunked kernel, then slice.
+  q = jnp.concatenate(
+      [q_nope, q_rope], axis=-1)
+  k = jnp.concatenate(
+      [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                (b, s, hp, cfg.qk_rope_head_dim))], axis=-1)
+  scale = 1.0 / math.sqrt(nope + cfg.qk_rope_head_dim)
+  if v.shape[-1] != q.shape[-1]:
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, q.shape[-1] - vd)))
+  else:
+    v_p = v
+  out = chunked_attention(q, k, v_p, positions, positions, causal=causal,
+                          kv_chunk=kv_chunk, scale=scale)[..., :vd]
+  out = out.reshape(b, s, hp * vd)
+  return out_proj_einsum("bsh,hd->bsd", out, params["wo"], cfg)
+
+
+def mla_decode(params, x: Array, cache: Dict[str, Array], pos: Array,
+               cfg: ModelConfig, tp: int) -> Tuple[Array, Dict[str, Array]]:
+  """Weight-absorbed MLA decode over the *compressed* cache.
+
+  cache: {"c_kv": [B,T,R], "k_rope": [B,T,Dr]} — the MLA memory win.
+  score = q_nopeᵀ·(Wk_b c) + q_ropeᵀ·k_rope  = (Wk_bᵀ q_nope)ᵀ·c + …
+  """
+  cd = cfg.compute_dtype
+  b = x.shape[0]
+  hp = cfg.padded_heads(tp)
+  nope, vd, r = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+  positions = pos.reshape(1)
+  q_nope, q_rope = _mla_q(params, x, positions, cfg, tp)      # [B,1,H,*]
+  c_kv, k_rope = _mla_ckv(params, x, positions, cfg)          # [B,1,R]
+  cc = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, pos, axis=1)
+  cr = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, pos,
+                                           axis=1)
+  wk_b = params["wk_b"].astype(cd).reshape(r, hp, nope)
+  q_abs = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                     wk_b.astype(jnp.float32))                # [B,1,H,R]
+  scale = 1.0 / math.sqrt(nope + cfg.qk_rope_head_dim)
+  sc = (jnp.einsum("bshr,btr->bsht", q_abs, cc.astype(jnp.float32))
+        + jnp.einsum("bshd,btd->bsht", q_rope.astype(jnp.float32),
+                     cr.astype(jnp.float32))) * scale
+  t = cc.shape[1]
+  k_pos = jnp.arange(t, dtype=jnp.int32)
+  mask = causal_swa_mask(positions, k_pos, 0, True)
+  sc = jnp.where(mask[None, :, None, :], sc, NEG_INF)
+  p = jax.nn.softmax(sc, axis=-1)
+  ctx = jnp.einsum("bsht,btr->bshr", p, cc.astype(jnp.float32))  # [B,1,H,R]
+  wv_b = params["wv_b"].astype(cd).reshape(r, hp, vd)
+  out = jnp.einsum("bshr,rhv->bshv", ctx, wv_b.astype(jnp.float32))
+  out = out.reshape(b, 1, hp * vd).astype(cd)
+  out = out_proj_einsum("bsh,hd->bsd", out, params["wo"], cfg)
+  return out, {"c_kv": cc, "k_rope": cr}

@@ -1,0 +1,147 @@
+"""Parameter-definition machinery + shared layers (norms, RoPE, embeddings).
+
+Params are nested dicts of arrays.  Every model module first builds a nested
+dict of :class:`ParamDef` (shape + PartitionSpec + init), from which we derive
+real initialization (smoke tests), ShapeDtypeStructs (dry-run, no allocation)
+and NamedShardings (pjit) — one source of truth, no drift between the three.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+  shape: Tuple[int, ...]
+  pspec: P = P()
+  dtype: Any = jnp.float32
+  init: str = "normal"       # normal | zeros | ones
+  scale: Optional[float] = None  # stddev; None -> 1/sqrt(fan_in)
+
+  def fan_in(self) -> int:
+    if len(self.shape) == 0:
+      return 1
+    return int(np.prod(self.shape[:-1])) if len(self.shape) > 1 else \
+        int(self.shape[0])
+
+
+def is_param_def(x) -> bool:
+  return isinstance(x, ParamDef)
+
+
+def _tree_map_defs(f: Callable[[ParamDef], Any], defs: PyTree) -> PyTree:
+  return jax.tree_util.tree_map(f, defs, is_leaf=is_param_def)
+
+
+def init_params(defs: PyTree, key: Array) -> PyTree:
+  """Materialize parameters (smoke tests / real training)."""
+  leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_param_def)
+  keys = jax.random.split(key, len(leaves))
+  out = []
+  for d, k in zip(leaves, keys):
+    if d.init == "zeros":
+      out.append(jnp.zeros(d.shape, d.dtype))
+    elif d.init == "ones":
+      out.append(jnp.ones(d.shape, d.dtype))
+    else:
+      # Use the last axis as fan-out; stddev 1/sqrt(fan_in) unless given.
+      if d.scale is not None:
+        std = d.scale
+      else:
+        fi = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+        std = 1.0 / math.sqrt(fi)
+      out.append((jax.random.normal(k, d.shape, jnp.float32) * std
+                  ).astype(d.dtype))
+  return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shapes(defs: PyTree) -> PyTree:
+  """ShapeDtypeStructs for the dry-run (zero allocation)."""
+  return _tree_map_defs(
+      lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def param_pspecs(defs: PyTree) -> PyTree:
+  return _tree_map_defs(lambda d: d.pspec, defs)
+
+
+def param_shardings(defs: PyTree, mesh: Mesh) -> PyTree:
+  return _tree_map_defs(lambda d: NamedSharding(mesh, d.pspec), defs)
+
+
+def num_params(defs: PyTree) -> int:
+  leaves = jax.tree_util.tree_leaves(defs, is_leaf=is_param_def)
+  return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Shared layers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-5) -> Array:
+  dt = x.dtype
+  x32 = x.astype(jnp.float32)
+  var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+  return (x32 * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+          ).astype(dt)
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array,
+               eps: float = 1e-5) -> Array:
+  dt = x.dtype
+  x32 = x.astype(jnp.float32)
+  mu = jnp.mean(x32, axis=-1, keepdims=True)
+  var = jnp.var(x32, axis=-1, keepdims=True)
+  return ((x32 - mu) * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+          + beta.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+  """[head_dim/2] inverse frequencies (float32)."""
+  return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                          / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+  """Rotate [..., S, H, D] by position.  ``positions``: [..., S] int32."""
+  d = x.shape[-1]
+  inv = rope_freqs(d, theta)                        # [D/2]
+  ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, D/2]
+  cos = jnp.cos(ang)[..., None, :]                  # [..., S, 1, D/2]
+  sin = jnp.sin(ang)[..., None, :]
+  x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+  out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+  return out.astype(x.dtype)
+
+
+def embed_lookup(table: Array, ids: Array, compute_dtype) -> Array:
+  """Token embedding; formally an SpMV (one-hot × table) — the GraphMat view
+  of lookup.  XLA lowers the gather optimally, so we don't force the
+  framework path here (DESIGN.md §5)."""
+  return table.astype(compute_dtype)[ids]
+
+
+def out_proj_einsum(spec: str, x: Array, w: Array, cfg) -> Array:
+  """Row-parallel output projection.  With cfg.low_precision_reduce the dot
+  emits compute-dtype so the downstream TP all-reduce moves bf16 (§Perf)."""
+  pet = cfg.compute_dtype if cfg.low_precision_reduce else None
+  return jnp.einsum(spec, x, w.astype(cfg.compute_dtype),
+                    preferred_element_type=pet)
+
+
+def unembed(x: Array, table_or_head: Array, compute_dtype) -> Array:
+  """Project to vocab logits: x [..., d] @ W [d, V]."""
+  return jnp.einsum("...d,dv->...v", x,
+                    table_or_head.astype(compute_dtype))

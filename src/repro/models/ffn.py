@@ -1,0 +1,38 @@
+"""Dense feed-forward (SwiGLU) blocks."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamDef, out_proj_einsum
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def swiglu_defs(d_model: int, d_ff: int) -> Dict[str, ParamDef]:
+  return {
+      "w_gate": ParamDef((d_model, d_ff), P(None, "model")),
+      "w_up": ParamDef((d_model, d_ff), P(None, "model")),
+      "w_down": ParamDef((d_ff, d_model), P("model", None)),
+  }
+
+
+def swiglu(params, x: Array, cfg_or_dtype) -> Array:
+  # Back-compat: accept either a ModelConfig or a bare compute dtype.
+  if isinstance(cfg_or_dtype, ModelConfig):
+    cfg = cfg_or_dtype
+    cd = cfg.compute_dtype
+  else:
+    cfg = None
+    cd = cfg_or_dtype
+  g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(cd))
+  u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(cd))
+  h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+  if cfg is not None:
+    return out_proj_einsum("bsf,fd->bsd", h, params["w_down"], cfg)
+  return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(cd))

@@ -1,0 +1,18 @@
+"""Model registry: config name -> ModelConfig, plus builder re-export."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model, build_model  # noqa: F401
+
+
+def get_config(name: str) -> ModelConfig:
+  from repro import configs as cfgs
+  return cfgs.get_config(name)
+
+
+def list_architectures():
+  from repro import configs as cfgs
+  return cfgs.ARCHITECTURES

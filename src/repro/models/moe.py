@@ -1,0 +1,200 @@
+"""Mixture-of-Experts — token→expert dispatch as a generalized SpMV.
+
+**This is where the paper's technique lands in the LM substrate**
+(DESIGN.md §5).  Top-k routing builds a sparse bipartite graph between
+tokens and experts; dispatch/combine are generalized SpMV on that graph:
+
+    dispatch:  X_e = Aᵀ ⊗ X      (gather rows of X along edges, grouped
+                                   by destination expert)
+    combine:   Y   = A  ⊗ Y_e    (PROCESS = scale-by-gate, REDUCE = +)
+
+The implementation is the *index* encoding of that SpMV — the edge list
+(token, expert, gate) sorted by destination expert, exactly the dst-sorted
+``CooGraph`` layout of :mod:`repro.core.graph`; combine is the same
+scatter-add segment reduction as ``spmv_coo``'s "add" fast path.  A one-hot
+einsum encoding (the dense-mask form, GShard-style) is kept as
+``moe_impl="onehot"`` for small shapes and for the GraphMat-equivalence test
+(``tests/test_moe_graphmat.py``), but the sort path is the production one:
+it adds zero matmul FLOPs, while the one-hot dispatch einsums cost
+O(T·E·Cg·d) — measured +13.4% whole-model HLO FLOPs on the DeepSeek-V2
+train_4k dry-run cell (EXPERIMENTS.md §Perf-3).
+
+Tokens are routed in fixed-size **groups** (≤ ``group_size`` tokens), with
+per-group expert capacity — static shapes, group axis sharded over the data
+mesh axes so routing/sort/scatter are shard-local; the only cross-device
+traffic is the [G, E, Cg, d] activation reshard (the all-to-all) between
+the token-sharded and expert-sharded layouts.
+
+Sharding: "ep" shards the expert axis over "model" (DeepSeek-V2: 160/16=10
+experts per column); "tp" shards each expert's hidden over "model"
+(Mixtral: 8 wide experts, 14336/16=896 each).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamDef, out_proj_einsum
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+  d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+  if cfg.moe_sharding == "ep":
+    up_spec = P("model", None, None)
+    down_spec = P("model", None, None)
+  else:
+    up_spec = P(None, None, "model")
+    down_spec = P(None, "model", None)
+  defs = {
+      "router": ParamDef((d, e), P(None, None), scale=0.02),
+      "w_gate": ParamDef((e, d, ff), up_spec),
+      "w_up": ParamDef((e, d, ff), up_spec),
+      "w_down": ParamDef((e, ff, d), down_spec),
+  }
+  if cfg.num_shared_experts:
+    sff = cfg.moe_d_ff * cfg.num_shared_experts
+    defs["shared"] = {
+        "w_gate": ParamDef((d, sff), P(None, "model")),
+        "w_up": ParamDef((d, sff), P(None, "model")),
+        "w_down": ParamDef((sff, d), P("model", None)),
+    }
+  return defs
+
+
+def _group_capacity(cfg: ModelConfig, tg: int) -> int:
+  cap = int(cfg.capacity_factor * tg * cfg.top_k / cfg.num_experts)
+  return max(cap, cfg.top_k)
+
+
+def _route_group_sort(logits: Array, x: Array, top_k: int, num_experts: int,
+                      capacity: int):
+  """Single group.  logits [Tg,E], x [Tg,d].
+
+  Returns (xe [E,Cg,d], aux = (e_sorted, pos, tok_sorted, gate_sorted,
+  keep)) — the dst-sorted token→expert edge list (CooGraph layout)."""
+  tg = logits.shape[0]
+  probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+  gate_vals, gate_idx = jax.lax.top_k(probs, top_k)            # [Tg,k]
+  gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+  e_flat = gate_idx.reshape(tg * top_k)
+  g_flat = gate_vals.reshape(tg * top_k)
+  order = jnp.argsort(e_flat)                # sort edges by dst expert
+  e_sorted = e_flat[order]
+  tok_sorted = order // top_k
+  gate_sorted = g_flat[order]
+  first = jnp.searchsorted(e_sorted, e_sorted)
+  pos = jnp.arange(tg * top_k, dtype=jnp.int32) - first.astype(jnp.int32)
+  keep = pos < capacity
+  slot_pos = jnp.where(keep, pos, capacity)  # overflow -> dropped slot
+  xe = jnp.zeros((num_experts, capacity, x.shape[-1]), x.dtype)
+  xe = xe.at[e_sorted, slot_pos].set(x[tok_sorted], mode="drop")
+  return xe, (e_sorted, slot_pos, tok_sorted, gate_sorted, keep)
+
+
+def _combine_group_sort(ye: Array, aux, tg: int):
+  """ye [E,Cg,d] -> y [Tg,d]: the segment scatter-add of ``spmv_coo``."""
+  e_sorted, slot_pos, tok_sorted, gate_sorted, keep = aux
+  y_slot = ye[e_sorted, jnp.minimum(slot_pos, ye.shape[1] - 1)]
+  y_slot = jnp.where(keep[:, None], y_slot, 0)
+  w = jnp.where(keep, gate_sorted, 0.0).astype(ye.dtype)
+  y = jnp.zeros((tg, ye.shape[-1]), ye.dtype)
+  return y.at[tok_sorted].add(y_slot * w[:, None])
+
+
+def _route_group_onehot(logits: Array, x: Array, top_k: int,
+                        num_experts: int, capacity: int):
+  """Dense-mask (one-hot) encoding; small shapes / equivalence tests only."""
+  tg = logits.shape[0]
+  probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+  gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+  gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+  onehot = jax.nn.one_hot(gate_idx, num_experts, dtype=jnp.float32)  # [T,k,E]
+  flat = onehot.reshape(tg * top_k, num_experts)
+  pos = jnp.cumsum(flat, axis=0) - flat
+  pos = jnp.sum(pos.reshape(tg, top_k, num_experts) *
+                onehot, axis=-1)                                     # [T,k]
+  keep = pos < capacity
+  slot_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                           dtype=jnp.float32)
+  disp = jnp.einsum("tke,tkc->tec", onehot,
+                    slot_oh * keep[..., None].astype(jnp.float32))
+  comb = jnp.einsum("tke,tkc,tk->tec", onehot,
+                    slot_oh * keep[..., None].astype(jnp.float32), gate_vals)
+  xe = jnp.einsum("tec,td->ecd", disp.astype(x.dtype), x)
+  return xe, comb
+
+
+def moe_forward(params, x: Array, cfg: ModelConfig, *,
+                group_size: int = 512, dp_spec=None,
+                moe_impl: str = "sort") -> Array:
+  """x [B,S,d] -> [B,S,d].  See module docstring."""
+  cd = cfg.compute_dtype
+  b, s, d = x.shape
+  t = b * s
+  tg = min(group_size, s)
+  g = t // tg
+  xt = x.reshape(g, tg, d)
+  logits = jnp.einsum("gtd,de->gte", xt, params["router"].astype(cd))
+  capacity = _group_capacity(cfg, tg)
+
+  e_axis = "model" if cfg.moe_sharding == "ep" else None
+  ff_axis = "model" if cfg.moe_sharding == "tp" else None
+
+  def constrain(z, spec):
+    if dp_spec is None:
+      return z
+    return jax.lax.with_sharding_constraint(z, spec)
+
+  if moe_impl == "sort":
+    xe, aux = jax.vmap(
+        lambda lg, xg: _route_group_sort(lg, xg, cfg.top_k, cfg.num_experts,
+                                         capacity))(logits, xt)
+    # The dispatch all-to-all: [G(data), E, Cg, d] -> expert-sharded.
+    xe = constrain(xe, P(dp_spec, e_axis, None, None))
+    h_g = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(cd))
+    h_u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(cd))
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(cd) * h_u
+    h = constrain(h, P(dp_spec, e_axis, None, ff_axis))
+    ye = out_proj_einsum("gecf,efd->gecd", h, params["w_down"], cfg)
+    # The combine all-to-all: back to token-sharded for the local scatter.
+    ye = constrain(ye, P(dp_spec, None, None, None))
+    yt = jax.vmap(lambda yg, ax: _combine_group_sort(yg, ax, tg))(ye, aux)
+  else:
+    xe, comb = jax.vmap(
+        lambda lg, xg: _route_group_onehot(lg, xg, cfg.top_k,
+                                           cfg.num_experts, capacity)
+    )(logits, xt)
+    xe = constrain(xe, P(dp_spec, e_axis, None, None))
+    h_g = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(cd))
+    h_u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(cd))
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(cd) * h_u
+    ye = out_proj_einsum("gecf,efd->gecd", h, params["w_down"], cfg)
+    ye = constrain(ye, P(dp_spec, None, None, None))
+    yt = jnp.einsum("gtec,gecd->gtd", comb.astype(cd), ye)
+
+  y = yt.reshape(b, s, d)
+  if cfg.num_shared_experts:
+    sp = params["shared"]
+    sg = jnp.einsum("bsd,df->bsf", x, sp["w_gate"].astype(cd))
+    su = jnp.einsum("bsd,df->bsf", x, sp["w_up"].astype(cd))
+    sh = jax.nn.silu(sg.astype(jnp.float32)).astype(cd) * su
+    y = y + out_proj_einsum("bsf,fd->bsd", sh, sp["w_down"], cfg)
+  return y
+
+
+def moe_aux_loss(router_logits: Array, top_k: int, num_experts: int) -> Array:
+  """Switch-style load-balancing auxiliary loss (mean over tokens)."""
+  probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+  probs2 = probs.reshape(-1, num_experts)
+  _, idx = jax.lax.top_k(probs2, top_k)
+  hard = jnp.sum(jax.nn.one_hot(idx, num_experts, dtype=jnp.float32), axis=1)
+  frac_tokens = jnp.mean(hard, axis=0)
+  frac_probs = jnp.mean(probs2, axis=0)
+  return num_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,347 @@
+"""State-space layers: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+TPU adaptation notes (DESIGN.md §3): the CUDA selective-scan kernel is a
+fused recurrent kernel; the TPU-idiomatic equivalent is a **chunked
+associative scan** — within a chunk the recurrence is a parallel
+``associative_scan`` (log-depth, VPU-friendly), across chunks a ``lax.scan``
+carries the [B, d_inner, N] state.  Mamba-2's SSD form is implemented in its
+matmul (MXU) formulation: intra-chunk attention-like masked matmuls +
+inter-chunk state recurrence.
+
+Sharding: channels/heads shard over "model"; B/C projections are small and
+replicated; states shard with channels, so decode keeps zero cross-device
+traffic inside the scan.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamDef, out_proj_einsum, rms_norm
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+  d_inner = cfg.ssm_expand * cfg.d_model
+  dt_rank = max(cfg.d_model // 16, 1)
+  return d_inner, dt_rank, cfg.ssm_state
+
+
+def mamba1_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+  d = cfg.d_model
+  d_inner, dt_rank, n = mamba1_dims(cfg)
+  # u and z projections kept separate so each output axis shards cleanly on
+  # "model" (a fused 2*d_inner projection would split a sharded axis at a
+  # non-boundary and force an all-gather).
+  return {
+      "in_proj_u": ParamDef((d, d_inner), P(None, "model")),
+      "in_proj_z": ParamDef((d, d_inner), P(None, "model")),
+      "conv_w": ParamDef((cfg.ssm_conv, d_inner), P(None, "model"),
+                         scale=0.2),
+      "conv_b": ParamDef((d_inner,), P("model"), init="zeros"),
+      "x_proj": ParamDef((d_inner, dt_rank + 2 * n), P("model", None)),
+      "dt_proj": ParamDef((dt_rank, d_inner), P(None, "model")),
+      "dt_bias": ParamDef((d_inner,), P("model"), init="zeros"),
+      "a_log": ParamDef((d_inner, n), P("model", None), init="ones"),
+      "d_skip": ParamDef((d_inner,), P("model"), init="ones"),
+      "out_proj": ParamDef((d_inner, d), P("model", None)),
+  }
+
+
+def _causal_conv(u: Array, w: Array, b: Array,
+                 state: Optional[Array] = None) -> Array:
+  """Depthwise causal conv1d.  u [B,S,C], w [K,C].  ``state``: [B,K-1,C]
+  prefix for decode continuation."""
+  k = w.shape[0]
+  if state is None:
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+  else:
+    up = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+  out = sum(up[:, i:i + u.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+  return out + b[None, None, :]
+
+
+def _scan_chunked(a: Array, bx: Array, h0: Array, chunk: int
+                  ) -> Tuple[Array, Array]:
+  """h_t = a_t * h_{t-1} + bx_t along axis 1.
+
+  a, bx: [B, S, ...]; h0 [B, ...].  Returns (h over time [B,S,...], h_last).
+  Within-chunk: parallel associative scan; across chunks: lax.scan.
+  """
+  b_dim, s = a.shape[0], a.shape[1]
+  chunk = min(chunk, s)
+  if s % chunk:
+    raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+  nc = s // chunk
+  ac = a.reshape((b_dim, nc, chunk) + a.shape[2:]).swapaxes(0, 1)
+  bc = bx.reshape((b_dim, nc, chunk) + a.shape[2:]).swapaxes(0, 1)
+
+  def combine(l, r):
+    al, bl = l
+    ar, br = r
+    return al * ar, ar * bl + br
+
+  def outer(h, inp):
+    a_k, b_k = inp                       # [B, chunk, ...]
+    aa, bb = jax.lax.associative_scan(combine, (a_k, b_k), axis=1)
+    h_t = aa * h[:, None] + bb           # [B, chunk, ...]
+    return h_t[:, -1], h_t
+
+  h_last, hs = jax.lax.scan(outer, h0, (ac, bc))
+  hs = hs.swapaxes(0, 1).reshape((b_dim, s) + a.shape[2:])
+  return hs, h_last
+
+
+def _shard_mapped_fused_scan(u, dt, a, bmat, cmat, cfg, dp_spec):
+  """Run the fused Pallas selective scan per-shard.
+
+  Interpret-mode Pallas under global GSPMD would reshard at every grid step
+  (the grid's dynamic slices cross shard boundaries); on real TPUs the
+  kernel is per-device anyway, so shard_map is the faithful semantics: each
+  device scans its (batch-shard × channel-shard) slice locally.
+  """
+  from repro.kernels.selective_scan import selective_scan_pallas
+
+  def local(u_, dt_, a_, b_, c_):
+    return selective_scan_pallas(u_, dt_, a_, b_, c_,
+                                 seq_chunk=cfg.ssm_chunk)
+
+  mesh = jax.sharding.get_abstract_mesh()
+  if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+    return local(u, dt, a, bmat, cmat)
+  dp = dp_spec
+  return jax.shard_map(
+      local, mesh=mesh,
+      in_specs=(P(dp, None, "model"), P(dp, None, "model"),
+                P("model", None), P(dp, None, None), P(dp, None, None)),
+      out_specs=P(dp, None, "model"), check_vma=False)(u, dt, a, bmat, cmat)
+
+
+def mamba1_forward(params, x: Array, cfg: ModelConfig,
+                   h0: Optional[Array] = None, dp_spec=None) -> Array:
+  """x [B,S,d] -> [B,S,d] (training/prefill path)."""
+  cd = cfg.compute_dtype
+  b, s, d = x.shape
+  d_inner, dt_rank, n = mamba1_dims(cfg)
+  u = jnp.einsum("bsd,de->bse", x, params["in_proj_u"].astype(cd))
+  z = jnp.einsum("bsd,de->bse", x, params["in_proj_z"].astype(cd))
+  u = _causal_conv(u, params["conv_w"].astype(cd),
+                   params["conv_b"].astype(cd))
+  u = jax.nn.silu(u.astype(jnp.float32)).astype(cd)
+  dbc = jnp.einsum("bsc,ce->bse", u, params["x_proj"].astype(cd))
+  dt, bmat, cmat = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+  dt = jnp.einsum("bsr,rc->bsc", dt, params["dt_proj"].astype(cd))
+  dt = jax.nn.softplus(dt.astype(jnp.float32)
+                       + params["dt_bias"].astype(jnp.float32))  # [B,S,C]
+  a = -jnp.exp(params["a_log"].astype(jnp.float32))              # [C,N]
+  if cfg.ssm_impl == "fused":
+    # §Perf: fused Pallas selective scan — h stays in VMEM, the [B,S,C,N]
+    # discretization never touches HBM (forward/prefill path).
+    y = _shard_mapped_fused_scan(u.astype(jnp.float32), dt, a,
+                                 bmat.astype(jnp.float32),
+                                 cmat.astype(jnp.float32), cfg, dp_spec)
+  else:
+    # Discretize: a_bar [B,S,C,N], b_bar·u [B,S,C,N].  ssm_scan_dtype
+    # trades scan-operand precision for HBM bytes (§Perf iteration).
+    sdt = jnp.dtype(cfg.ssm_scan_dtype)
+    a_bar = jnp.exp(dt[..., None] * a[None, None]).astype(sdt)
+    bu = (dt[..., None] * bmat[:, :, None, :].astype(jnp.float32)
+          * u[..., None].astype(jnp.float32)).astype(sdt)
+    h0 = jnp.zeros((b, d_inner, n), sdt) if h0 is None else h0
+    hs, _ = _scan_chunked(a_bar, bu, h0, cfg.ssm_chunk)
+    y = jnp.einsum("bscn,bsn->bsc", hs.astype(jnp.float32),
+                   cmat.astype(jnp.float32))
+  y = y + params["d_skip"].astype(jnp.float32) * u.astype(jnp.float32)
+  y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cd)
+  return out_proj_einsum("bsc,cd->bsd", y, params["out_proj"], cfg)
+
+
+def mamba1_decode(params, x: Array, state: Dict[str, Array],
+                  cfg: ModelConfig) -> Tuple[Array, Dict[str, Array]]:
+  """One token.  x [B,1,d]; state {"conv": [B,K-1,C], "h": [B,C,N]}."""
+  cd = cfg.compute_dtype
+  b = x.shape[0]
+  d_inner, dt_rank, n = mamba1_dims(cfg)
+  u = jnp.einsum("bsd,de->bse", x, params["in_proj_u"].astype(cd))
+  z = jnp.einsum("bsd,de->bse", x, params["in_proj_z"].astype(cd))
+  u_conv = _causal_conv(u, params["conv_w"].astype(cd),
+                        params["conv_b"].astype(cd), state=state["conv"])
+  new_conv = jnp.concatenate([state["conv"][:, 1:], u.astype(
+      state["conv"].dtype)], axis=1)
+  u = jax.nn.silu(u_conv.astype(jnp.float32)).astype(cd)
+  dbc = jnp.einsum("bsc,ce->bse", u, params["x_proj"].astype(cd))
+  dt, bmat, cmat = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+  dt = jnp.einsum("bsr,rc->bsc", dt, params["dt_proj"].astype(cd))
+  dt = jax.nn.softplus(dt.astype(jnp.float32)
+                       + params["dt_bias"].astype(jnp.float32))
+  a = -jnp.exp(params["a_log"].astype(jnp.float32))
+  a_bar = jnp.exp(dt[:, 0, :, None] * a[None])                   # [B,C,N]
+  bu = (dt[:, 0, :, None] * bmat[:, 0, None, :].astype(jnp.float32)
+        * u[:, 0, :, None].astype(jnp.float32))
+  h = a_bar * state["h"] + bu
+  y = jnp.einsum("bcn,bn->bc", h, cmat[:, 0].astype(jnp.float32))
+  y = y + params["d_skip"].astype(jnp.float32) * u[:, 0].astype(jnp.float32)
+  y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(cd)
+  out = out_proj_einsum("bc,cd->bd", y, params["out_proj"], cfg)[:, None]
+  return out, {"conv": new_conv, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+  d_inner = cfg.ssm_expand * cfg.d_model
+  nheads = d_inner // cfg.ssm_head_dim
+  return d_inner, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+  d = cfg.d_model
+  d_inner, nheads, hd, n = mamba2_dims(cfg)
+  # Projections split (z | x | BC | dt) so sharded axes have clean
+  # boundaries; B/C (n_groups=1) and dt are small and replicated.
+  return {
+      "in_proj_z": ParamDef((d, d_inner), P(None, "model")),
+      "in_proj_x": ParamDef((d, d_inner), P(None, "model")),
+      "in_proj_bc": ParamDef((d, 2 * n), P(None, None)),
+      "in_proj_dt": ParamDef((d, nheads), P(None, "model")),
+      "conv_w": ParamDef((cfg.ssm_conv, d_inner + 2 * n), P(None, None),
+                         scale=0.2),
+      "conv_b": ParamDef((d_inner + 2 * n,), P(None), init="zeros"),
+      "a_log": ParamDef((nheads,), P("model"), init="ones"),
+      "dt_bias": ParamDef((nheads,), P("model"), init="zeros"),
+      "d_skip": ParamDef((nheads,), P("model"), init="ones"),
+      "norm_g": ParamDef((d_inner,), P("model"), init="ones"),
+      "out_proj": ParamDef((d_inner, d), P("model", None)),
+  }
+
+
+def _ssd_chunk_scan(x: Array, dt: Array, a: Array, bmat: Array, cmat: Array,
+                    chunk: int) -> Array:
+  """SSD in matmul form.  x [B,S,H,P]; dt [B,S,H]; a [H] (negative);
+  bmat/cmat [B,S,N].  Returns y [B,S,H,P] (fp32).
+
+  h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_tᵀ ;  y_t = C_t · h_t
+  """
+  b, s, h, p = x.shape
+  n = bmat.shape[-1]
+  chunk = min(chunk, s)
+  if s % chunk:
+    raise ValueError(f"seq {s} % chunk {chunk} != 0")
+  nc = s // chunk
+  # log-decay per step: [B,S,H]
+  la = dt * a[None, None, :]
+  xr = x.reshape(b, nc, chunk, h, p)
+  dtr = dt.reshape(b, nc, chunk, h)
+  lar = la.reshape(b, nc, chunk, h)
+  br = bmat.reshape(b, nc, chunk, n)
+  cr = cmat.reshape(b, nc, chunk, n)
+  cum = jnp.cumsum(lar, axis=2)                        # [B,nc,C,H]
+
+  # Intra-chunk ("attention") term: L[i,j] = exp(cum_i - cum_j) for j<=i.
+  li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,C,C,H]
+  causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+  lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(li), 0.0)
+  cb = jnp.einsum("bkin,bkjn->bkij", cr, br)           # [B,nc,C,C]
+  w = cb[..., None] * lmat * dtr[:, :, None, :, :]     # [B,nc,C,C,H]
+  y_intra = jnp.einsum("bkijh,bkjhp->bkihp", w, xr)
+
+  # Chunk-final states: S_k = Σ_j exp(cum_last - cum_j)·dt_j·B_j x_jᵀ
+  decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # [B,nc,C,H]
+  sx = xr * (dtr * decay_to_end)[..., None]            # [B,nc,C,H,P]
+  s_chunk = jnp.einsum("bkjn,bkjhp->bkhnp", br, sx)    # [B,nc,H,N,P]
+
+  # Inter-chunk recurrence over k: h' = exp(sum la_chunk) h + S_k.
+  a_chunk = jnp.exp(cum[:, :, -1, :])                  # [B,nc,H]
+
+  def step(hprev, inp):
+    ak, sk = inp                                       # [B,H], [B,H,N,P]
+    hnew = ak[..., None, None] * hprev + sk
+    return hnew, hprev                                 # emit state BEFORE
+
+  h0 = jnp.zeros((b, h, n, p), jnp.float32)
+  _, hprevs = jax.lax.scan(
+      step, h0, (a_chunk.swapaxes(0, 1), s_chunk.swapaxes(0, 1)))
+  hprevs = hprevs.swapaxes(0, 1)                       # [B,nc,H,N,P]
+
+  # Inter-chunk contribution: y_i += C_i · (decay_from_start_i ∘ h_prev)
+  decay_from_start = jnp.exp(cum)                      # [B,nc,C,H]
+  y_inter = jnp.einsum("bkin,bkhnp->bkihp", cr, hprevs) \
+      * decay_from_start[..., None]
+  y = (y_intra + y_inter).reshape(b, s, h, p)
+  return y
+
+
+def mamba2_forward(params, x: Array, cfg: ModelConfig) -> Array:
+  cd = cfg.compute_dtype
+  b, s, d = x.shape
+  d_inner, nheads, hd, n = mamba2_dims(cfg)
+  z = jnp.einsum("bsd,de->bse", x, params["in_proj_z"].astype(cd))
+  xp = jnp.einsum("bsd,de->bse", x, params["in_proj_x"].astype(cd))
+  bc = jnp.einsum("bsd,de->bse", x, params["in_proj_bc"].astype(cd))
+  dt = jnp.einsum("bsd,de->bse", x, params["in_proj_dt"].astype(cd))
+  xbc = jnp.concatenate([xp, bc], axis=-1)
+  xbc = _causal_conv(xbc, params["conv_w"].astype(cd),
+                     params["conv_b"].astype(cd))
+  xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(cd)
+  xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+  dt = jax.nn.softplus(dt.astype(jnp.float32)
+                       + params["dt_bias"].astype(jnp.float32))  # [B,S,H]
+  a = -jnp.exp(params["a_log"].astype(jnp.float32))              # [H]
+  xh = xs.reshape(b, s, nheads, hd).astype(jnp.float32)
+  y = _ssd_chunk_scan(xh, dt, a, bmat.astype(jnp.float32),
+                      cmat.astype(jnp.float32), cfg.ssm_chunk)
+  y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+  y = y.reshape(b, s, d_inner)
+  y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cd)
+  y = rms_norm(y, params["norm_g"], cfg.norm_eps)
+  return out_proj_einsum("bsc,cd->bsd", y, params["out_proj"], cfg)
+
+
+def mamba2_decode(params, x: Array, state: Dict[str, Array],
+                  cfg: ModelConfig) -> Tuple[Array, Dict[str, Array]]:
+  """One token.  state {"conv": [B,K-1,C+2N], "h": [B,H,N,P]}."""
+  cd = cfg.compute_dtype
+  b = x.shape[0]
+  d_inner, nheads, hd, n = mamba2_dims(cfg)
+  z = jnp.einsum("bsd,de->bse", x, params["in_proj_z"].astype(cd))
+  xp = jnp.einsum("bsd,de->bse", x, params["in_proj_x"].astype(cd))
+  bc = jnp.einsum("bsd,de->bse", x, params["in_proj_bc"].astype(cd))
+  dt = jnp.einsum("bsd,de->bse", x, params["in_proj_dt"].astype(cd))
+  xbc = jnp.concatenate([xp, bc], axis=-1)
+  xbc_c = _causal_conv(xbc, params["conv_w"].astype(cd),
+                       params["conv_b"].astype(cd), state=state["conv"])
+  new_conv = jnp.concatenate(
+      [state["conv"][:, 1:], xbc.astype(state["conv"].dtype)], axis=1)
+  xbc_c = jax.nn.silu(xbc_c.astype(jnp.float32)).astype(cd)
+  xs, bmat, cmat = jnp.split(xbc_c, [d_inner, d_inner + n], axis=-1)
+  dt = jax.nn.softplus(dt.astype(jnp.float32)
+                       + params["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+  a = -jnp.exp(params["a_log"].astype(jnp.float32))
+  xh = xs[:, 0].reshape(b, nheads, hd).astype(jnp.float32)
+  a_bar = jnp.exp(dt * a[None])                                   # [B,H]
+  bu = (dt[..., None, None] * jnp.einsum(
+      "bn,bhp->bhnp", bmat[:, 0].astype(jnp.float32), xh))
+  h = a_bar[..., None, None] * state["h"] + bu
+  y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), h)
+  y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+  y = y.reshape(b, d_inner)
+  y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(cd)
+  y = rms_norm(y, params["norm_g"], cfg.norm_eps)
+  out = out_proj_einsum("bc,cd->bd", y, params["out_proj"], cfg)[:, None]
+  return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,3 @@
+"""Serving substrate: prefill + batched decode."""
+
+from repro.serve.engine import make_decode_step, make_prefill, generate  # noqa: F401

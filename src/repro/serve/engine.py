@@ -1,0 +1,64 @@
+"""Serving: prefill and one-token decode steps + a batched greedy loop.
+
+``serve_step`` semantics for the dry-run shapes: decode_* cells lower ONE
+new token against a KV cache / SSM state of ``seq_len`` (per assignment);
+prefill_* cells lower the full-sequence forward.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+Array = jax.Array
+PyTree = Any
+
+
+def make_prefill(model: Model):
+  """prefill(params, batch) -> logits (the prefill_* dry-run step)."""
+  def prefill(params, batch: Dict[str, Array]) -> Array:
+    logits, _ = model.forward(params, batch)
+    return logits
+  return prefill
+
+
+def make_decode_step(model: Model):
+  """step(params, token [B,1], cache, pos) -> (logits [B,1,V], cache)."""
+  def step(params, token: Array, cache: PyTree, pos: Array):
+    return model.decode_step(params, token, cache, pos)
+  return step
+
+
+def generate(model: Model, params, prompt: Array, *, max_new: int = 16,
+             max_seq: Optional[int] = None, greedy: bool = True,
+             rng: Optional[Array] = None) -> Array:
+  """Greedy/sampled generation for the examples (CPU-sized models).
+
+  prompt [B, P] int32.  Returns [B, P + max_new].
+  """
+  b, p = prompt.shape
+  max_seq = max_seq or (p + max_new)
+  cache = model.init_cache(b, max_seq)
+  step = jax.jit(make_decode_step(model))
+
+  # Prefill token-by-token (simple + exact; a fused prefill-with-cache is a
+  # serving optimization, not needed at example scale).
+  tok = prompt[:, :1]
+  for i in range(p):
+    logits, cache = step(params, prompt[:, i:i + 1], cache, jnp.int32(i))
+  out = [prompt]
+  last = logits[:, -1, : model.cfg.vocab_size]
+  for j in range(max_new):
+    if greedy or rng is None:
+      nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+    else:
+      rng, sub = jax.random.split(rng)
+      nxt = jax.random.categorical(sub, last)[:, None].astype(jnp.int32)
+    out.append(nxt)
+    logits, cache = step(params, nxt, cache, jnp.int32(p + j))
+    last = logits[:, -1, : model.cfg.vocab_size]
+  return jnp.concatenate(out, axis=1)

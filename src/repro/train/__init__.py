@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, steps, data pipeline, checkpointing."""
+
+from repro.train.optimizer import adamw_init, adamw_update, cosine_lr  # noqa: F401
+from repro.train.steps import make_train_step, make_eval_step  # noqa: F401
+from repro.train.data import synthetic_batch, SyntheticTokenPipeline  # noqa: F401

@@ -1,0 +1,73 @@
+"""AdamW + cosine schedule (pure-JAX, pytree-shaped like the params).
+
+Optimizer state shards exactly like its parameter (same PartitionSpec),
+which the launchers rely on for the dry-run shardings.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+  step: Array      # int32 scalar
+  mu: PyTree       # first moment (like params)
+  nu: PyTree       # second moment (like params)
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+  zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+  return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def cosine_lr(step: Array, *, peak: float = 3e-4, warmup: int = 100,
+              total: int = 10000, floor: float = 0.1) -> Array:
+  s = step.astype(jnp.float32)
+  warm = s / jnp.maximum(warmup, 1)
+  frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+  cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+  return peak * jnp.where(s < warmup, warm, cos)
+
+
+def adamw_update(grads: PyTree, state: AdamWState, params: PyTree, *,
+                 lr: Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 grad_clip: float = 1.0) -> Tuple[PyTree, AdamWState, Array]:
+  """Returns (new_params, new_state, global_grad_norm)."""
+  # Global-norm clip.
+  sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+           for g in jax.tree_util.tree_leaves(grads))
+  gnorm = jnp.sqrt(sq)
+  scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+  step = state.step + 1
+  b1c = 1 - b1 ** step.astype(jnp.float32)
+  b2c = 1 - b2 ** step.astype(jnp.float32)
+
+  def upd(p, g, m, v):
+    g = g.astype(jnp.float32) * scale
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * jnp.square(g)
+    mhat = m2 / b1c
+    vhat = v2 / b2c
+    delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+        jnp.float32)
+    return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+  flat_p, treedef = jax.tree_util.tree_flatten(params)
+  flat_g = jax.tree_util.tree_leaves(grads)
+  flat_m = jax.tree_util.tree_leaves(state.mu)
+  flat_v = jax.tree_util.tree_leaves(state.nu)
+  out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m,
+                                               flat_v)]
+  new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+  new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+  new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+  return new_p, AdamWState(step, new_m, new_v), gnorm

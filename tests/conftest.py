@@ -1,0 +1,16 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see 1 device
+(the 512-device override belongs ONLY to repro.launch.dryrun)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rmat_small():
+  from repro.graphs import dedupe_edges, remove_self_loops, rmat_edges
+  src, dst = rmat_edges(8, 8, seed=3)
+  src, dst = remove_self_loops(src, dst)
+  src, dst = dedupe_edges(src, dst)
+  n = 256
+  w = np.random.default_rng(0).uniform(0.1, 2.0, len(src)).astype(np.float32)
+  return n, src, dst, w

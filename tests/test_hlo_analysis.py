@@ -1,0 +1,92 @@
+"""Unit tests for the trip-count-aware HLO cost analyzer."""
+
+import textwrap
+
+from repro.analysis.hlo_cost import HloCost, analyze
+
+# A miniature optimized-HLO module exercising: dot flops, while-loop trip
+# multiplication, collective accounting, DUS in-place semantics, fusion
+# descent.  Shapes are small and exact so expectations are closed-form.
+FIXTURE = textwrap.dedent("""\
+    HloModule test, entry_computation_layout={()->f32[8,16]{1,0}}
+
+    %add_comp (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %r = f32[] add(%a, %b)
+    }
+
+    %fused_dus (p0: f32[10,8,16], p1: f32[1,8,16], p2: s32[]) -> f32[10,8,16] {
+      %p0 = f32[10,8,16]{2,1,0} parameter(0)
+      %p1 = f32[1,8,16]{2,1,0} parameter(1)
+      %p2 = s32[] parameter(2)
+      ROOT %dus = f32[10,8,16]{2,1,0} dynamic-update-slice(%p0, %p1, %p2)
+    }
+
+    %body (param: (s32[], f32[8,16], f32[16,16], f32[10,8,16])) -> (s32[], f32[8,16], f32[16,16], f32[10,8,16]) {
+      %param = (s32[], f32[8,16]{1,0}, f32[16,16]{1,0}, f32[10,8,16]{2,1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%param), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%param), index=1
+      %w = f32[16,16]{1,0} get-tuple-element(%param), index=2
+      %acc = f32[10,8,16]{2,1,0} get-tuple-element(%param), index=3
+      %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%y), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add_comp
+      %yr = f32[1,8,16]{2,1,0} reshape(%ar)
+      %upd = f32[10,8,16]{2,1,0} fusion(%acc, %yr, %i), kind=kLoop, calls=%fused_dus
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      ROOT %out = (s32[], f32[8,16]{1,0}, f32[16,16]{1,0}, f32[10,8,16]{2,1,0}) tuple(%i2, %ar, %w, %upd)
+    }
+
+    %cond (param: (s32[], f32[8,16], f32[16,16], f32[10,8,16])) -> pred[] {
+      %param = (s32[], f32[8,16]{1,0}, f32[16,16]{1,0}, f32[10,8,16]{2,1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%param), index=0
+      %lim = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i, %lim), direction=LT
+    }
+
+    ENTRY %main () -> f32[8,16] {
+      %c0 = s32[] constant(0)
+      %x0 = f32[8,16]{1,0} constant(0)
+      %w0 = f32[16,16]{1,0} constant(0)
+      %a0 = f32[10,8,16]{2,1,0} constant(0)
+      %t0 = (s32[], f32[8,16]{1,0}, f32[16,16]{1,0}, f32[10,8,16]{2,1,0}) tuple(%c0, %x0, %w0, %a0)
+      %wh = (s32[], f32[8,16]{1,0}, f32[16,16]{1,0}, f32[10,8,16]{2,1,0}) while(%t0), condition=%cond, body=%body
+      ROOT %res = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+    }
+    """)
+
+
+def test_parse_computations():
+  hc = HloCost(FIXTURE)
+  assert set(hc.comps) >= {"add_comp", "fused_dus", "body", "cond", "main"}
+  assert hc.entry == "main"
+
+
+def test_trip_count_detected():
+  hc = HloCost(FIXTURE)
+  assert hc._trip_count("cond") == 10.0
+
+
+def test_dot_flops_with_trip_multiplier():
+  res = analyze(FIXTURE)
+  # dot: 2 * |out|(8*16) * contracting(16) = 4096 flops, x10 trips.
+  assert res["flops"] >= 4096 * 10
+  assert res["flops"] < 4096 * 10 + 2000  # small elementwise slack
+
+
+def test_collective_bytes_with_trip_multiplier():
+  res = analyze(FIXTURE)
+  (key, rec), = [(k, v) for k, v in res["collectives"].items()
+                 if v["kind"] == "all-reduce"]
+  assert rec["group_size"] == 16
+  assert rec["count"] == 10
+  assert rec["bytes"] == 8 * 16 * 4 * 10
+
+
+def test_dus_counts_region_not_buffer():
+  res = analyze(FIXTURE)
+  # The DUS fusion must contribute 3 * region (3*512B) per trip, NOT the
+  # full 10x8x16 buffer (5120B) in+out per trip.
+  per_trip_full = (10 * 8 * 16 * 4) * 2
+  assert res["bytes"] < per_trip_full * 10  # would be 102400 if buggy

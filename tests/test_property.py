@@ -1,0 +1,118 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+import repro.core.spmv as spmv_mod
+from repro.core.vertex_program import GraphProgram
+
+
+def edges_strategy(max_n=40, max_e=200):
+  return st.integers(4, max_n).flatmap(
+      lambda n: st.tuples(
+          st.just(n),
+          st.lists(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                   min_size=1, max_size=max_e)))
+
+
+def _prep(n, pairs):
+  pairs = sorted(set((a, b) for a, b in pairs if a != b))
+  if not pairs:
+    pairs = [(0, min(1, n - 1))]
+  src = np.array([p[0] for p in pairs], np.int32)
+  dst = np.array([p[1] for p in pairs], np.int32)
+  return src, dst
+
+
+@settings(max_examples=30, deadline=None)
+@given(edges_strategy(), st.integers(0, 2**31 - 1))
+def test_coo_ell_agree_min_plus(ne, seed):
+  """Invariant: every backend computes the same generalized SpMV."""
+  n, pairs = ne
+  src, dst = _prep(n, pairs)
+  rng = np.random.default_rng(seed)
+  w = rng.uniform(0.1, 2.0, len(src)).astype(np.float32)
+  msg = jnp.asarray(rng.uniform(0, 5, n).astype(np.float32))
+  act = jnp.asarray(rng.uniform(size=n) > 0.4)
+  prog = GraphProgram(process_message=lambda m, e, d: m + e,
+                      reduce_kind="min",
+                      apply=lambda r, o: jnp.minimum(r, o),
+                      process_reads_dst=False)
+  coo = G.build_coo(src, dst, w, n=n)
+  ell = G.build_ell(src, dst, w, n=n, width=4)
+  y1, r1 = spmv_mod.spmv_coo(coo, msg, act, msg, prog)
+  y2, r2 = spmv_mod.spmv_ell(ell, msg, act, msg, prog)
+  np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+  np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(edges_strategy(), st.integers(0, 2**31 - 1))
+def test_monotone_frontier_shrinks_distance(ne, seed):
+  """Invariant: SSSP supersteps never increase any distance (min-monoid)."""
+  n, pairs = ne
+  src, dst = _prep(n, pairs)
+  rng = np.random.default_rng(seed)
+  w = rng.uniform(0.1, 2.0, len(src)).astype(np.float32)
+  coo = G.build_coo(src, dst, w, n=n)
+  prog = GraphProgram(process_message=lambda m, e, d: m + e,
+                      reduce_kind="min",
+                      apply=lambda r, o: jnp.minimum(r, o),
+                      process_reads_dst=False)
+  dist = jnp.full((n,), jnp.inf, jnp.float32).at[0].set(0.0)
+  act = jnp.zeros((n,), bool).at[0].set(True)
+  from repro.core.engine import _superstep, EngineState
+  s = EngineState(dist, act, jnp.int32(0), jnp.int32(1))
+  for _ in range(4):
+    s2 = _superstep(coo, prog, s, "coo")
+    assert np.all(np.asarray(s2.prop) <= np.asarray(s.prop) + 1e-6)
+    s = s2
+
+
+@settings(max_examples=25, deadline=None)
+@given(edges_strategy(), st.integers(0, 2**31 - 1))
+def test_inactive_sources_never_contribute(ne, seed):
+  """Invariant: the frontier (paper's bitvector) annihilates exactly the
+  inactive sources — result equals SpMV on the active-subgraph."""
+  n, pairs = ne
+  src, dst = _prep(n, pairs)
+  rng = np.random.default_rng(seed)
+  w = rng.uniform(0.1, 2.0, len(src)).astype(np.float32)
+  act = rng.uniform(size=n) > 0.5
+  msg = jnp.asarray(rng.uniform(0, 5, n).astype(np.float32))
+  prog = GraphProgram(process_message=lambda m, e, d: m * e,
+                      reduce_kind="add", process_reads_dst=False)
+  full = G.build_coo(src, dst, w, n=n)
+  keep = act[src]
+  sub = G.build_coo(src[keep], dst[keep], w[keep], n=n)
+  y1, r1 = spmv_mod.spmv_coo(full, msg, jnp.asarray(act), msg, prog)
+  y2, r2 = spmv_mod.spmv_coo(sub, msg, jnp.ones((n,), bool), msg, prog)
+  np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+  np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_segment_scan_matches_numpy(n_seg, width, seed):
+  """Generic segmented-scan reduce == numpy groupby on random segments."""
+  rng = np.random.default_rng(seed)
+  e = n_seg * width
+  dst = np.sort(rng.integers(0, n_seg, e)).astype(np.int32)
+  src = rng.integers(0, n_seg, e).astype(np.int32)
+  w = rng.uniform(0.1, 1.0, e).astype(np.float32)
+  coo = G.build_coo(src, dst, w, n=n_seg)
+  msg = jnp.asarray(rng.uniform(0, 1, n_seg).astype(np.float32))
+  prog = GraphProgram(process_message=lambda m, e_, d: m * e_,
+                      reduce_kind="generic",
+                      reduce=lambda a, b: jax.tree_util.tree_map(
+                          jnp.add, a, b),
+                      reduce_identity=0.0, process_reads_dst=False)
+  y, _ = spmv_mod.spmv_coo(coo, msg, jnp.ones((n_seg,), bool), msg, prog)
+  oracle = np.zeros(n_seg, np.float32)
+  np.add.at(oracle, np.asarray(coo.dst)[np.asarray(coo.emask)],
+            (np.asarray(msg)[np.asarray(coo.src)]
+             * np.asarray(coo.w))[np.asarray(coo.emask)])
+  np.testing.assert_allclose(np.asarray(y), oracle, rtol=1e-4, atol=1e-5)
