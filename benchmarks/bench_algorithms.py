@@ -34,6 +34,47 @@ def make_graphs(scale: int = 12, ef: int = 8, seed: int = 7):
   return n, src, dst, w
 
 
+def multi_query(scale: int = 12) -> list:
+  """SpMV→SpMM serving sweep: Q batched queries vs Q sequential runs.
+
+  Both paths execute the identical supersteps (results are bitwise equal),
+  so edges-processed/sec differences are pure engine efficiency: one fused
+  [n, Q] loop amortizes every gathered edge across all Q query lanes.
+  """
+  from repro.algos import multi_bfs
+  from repro.algos.multi import bfs_columns, multi_bfs_program
+  from repro.core.engine import init_batched_state, run_batched_rounds
+
+  rows = []
+  n, src, dst, w = make_graphs(scale)
+  ss, dd = symmetrize(src, dst)
+  e = len(ss)
+  rng = np.random.default_rng(13)
+  prog = multi_bfs_program()
+  for be in ("coo", "ell"):
+    g = G.build_coo(ss, dd, n=n) if be == "coo" else G.build_ell(ss, dd, n=n)
+    for q in (1, 8, 64):
+      sources = rng.choice(n, size=q, replace=False).astype(np.int32)
+      # Work accounting: every superstep sweeps all E edges (SpMM view);
+      # a query converging in k supersteps therefore processes k·E edges.
+      st0 = init_batched_state(*bfs_columns(jnp.asarray(sources), n))
+      st, _ = run_batched_rounds(g, prog, st0, 64, backend=be)
+      edges_total = e * int(np.asarray(st.iters).sum())
+
+      us_b, _ = bench(lambda: multi_bfs(g, sources, n, backend=be))
+      meps_b = edges_total / us_b  # edges/µs == M edges/s
+      rows.append(row(f"multi_query/bfs_{be}_q{q}_batched", us_b,
+                      f"agg_meps={meps_b:.1f}"))
+      us_s, _ = bench(
+          lambda: [bfs(g, int(s), n, backend=be) for s in sources],
+          iters=3)
+      meps_s = edges_total / us_s
+      rows.append(row(f"multi_query/bfs_{be}_q{q}_sequential", us_s,
+                      f"agg_meps={meps_s:.1f} "
+                      f"batched_speedup={us_s/us_b:.2f}x"))
+  return rows
+
+
 def main(scale: int = 12) -> list:
   rows = []
   n, src, dst, w = make_graphs(scale)

@@ -26,6 +26,9 @@ def main(argv=None) -> int:
   sections.append(("fig4_table2_algorithms",
                    lambda: bench_algorithms.main(scale)))
 
+  sections.append(("multi_query_serving",
+                   lambda: bench_algorithms.multi_query(scale)))
+
   from benchmarks import bench_native_gap
   sections.append(("table3_native_gap",
                    lambda: bench_native_gap.main(scale)))

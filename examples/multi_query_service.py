@@ -1,0 +1,71 @@
+"""Multi-query serving demo: continuous-batched vertex programs.
+
+Builds an RMAT graph, stands up a :class:`GraphQueryServer`, and pushes a
+burst of BFS and personalized-PageRank traffic through it — demonstrating
+slot-pool continuous batching (converged queries retire mid-flight and
+queued ones swap in), request coalescing, the result cache, and the metrics
+surface.
+
+  PYTHONPATH=src python examples/multi_query_service.py
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algos import bfs
+from repro.core import graph as G
+from repro.graphs import dedupe_edges, remove_self_loops, rmat_edges, symmetrize
+from repro.service import (BfsFamily, GraphQueryServer, PprFamily, QuerySpec)
+
+
+def main():
+  scale, ef = 10, 8
+  n = 1 << scale
+  src, dst = rmat_edges(scale, ef, seed=7)
+  src, dst = remove_self_loops(src, dst)
+  src, dst = dedupe_edges(src, dst)
+  ss, dd = symmetrize(src, dst)
+  graph = G.build_ell(ss, dd, n=n)
+  print(f"graph: n={n} edges={len(ss)} (symmetrized RMAT)")
+
+  # --- BFS traffic: 24 queries (some repeated), 8 slots.
+  rng = np.random.default_rng(0)
+  sources = rng.integers(0, n, 18).tolist() + [5, 5, 9, 9, 5, 9]
+  server = GraphQueryServer(graph, BfsFamily(n), num_slots=8,
+                            steps_per_round=2)
+  tickets = {server.submit(QuerySpec("bfs", int(s))): int(s)
+             for s in sources}
+  results = server.drain()
+
+  # Spot-check three tickets against the single-query engine.
+  for qid in list(tickets)[:3]:
+    expect = np.asarray(bfs(graph, tickets[qid], n))
+    np.testing.assert_array_equal(results[qid], expect)
+  print(f"bfs: served {len(results)} queries; "
+        f"sample hops from v{tickets[next(iter(tickets))]}: "
+        f"{results[next(iter(tickets))][:8].tolist()}")
+  print("bfs service stats:")
+  print(json.dumps(server.stats(), indent=2, default=str)[:1200])
+
+  # --- Personalized PageRank traffic on the directed graph.
+  out_deg = jnp.asarray(np.bincount(src, minlength=n).astype(np.float32))
+  pgraph = G.build_coo(src, dst, n=n)
+  ppr_server = GraphQueryServer(pgraph, PprFamily(out_deg, tol=1e-6),
+                                num_slots=4, steps_per_round=4)
+  qids = [ppr_server.submit(QuerySpec("ppr", int(s)))
+          for s in rng.integers(0, n, 10)]
+  ppr_results = ppr_server.drain()
+  top = np.argsort(-ppr_results[qids[0]])[:5]
+  print(f"ppr: served {len(ppr_results)} queries; "
+        f"top-5 vertices for query 0: {top.tolist()}")
+  s2c = ppr_server.stats()["histograms"]["query.supersteps_to_converge"]
+  print(f"ppr supersteps-to-converge: mean={s2c['mean']:.1f} "
+        f"min={s2c['min']:.0f} max={s2c['max']:.0f}")
+
+
+if __name__ == "__main__":
+  main()

@@ -5,3 +5,5 @@ from repro.algos.bfs import bfs, bfs_program  # noqa: F401
 from repro.algos.sssp import sssp, sssp_program  # noqa: F401
 from repro.algos.triangle_count import triangle_count  # noqa: F401
 from repro.algos.collab_filter import collaborative_filtering  # noqa: F401
+from repro.algos.multi import (multi_bfs, multi_sssp,  # noqa: F401
+                               personalized_pagerank)

@@ -27,6 +27,10 @@ def bfs_program() -> GraphProgram:
       apply=lambda red, old: jnp.minimum(red, old),
       process_reads_dst=False,
       needs_recv=False,  # min-relaxation is monotone: APPLY(∞, old) == old
+      # UNREACHED + 1 still dominates every real distance and every stored
+      # property (old ≤ UNREACHED), so an inert lane can never win the min.
+      inert_message=UNREACHED,
+      lanewise=True,
       name="bfs")
 
 

@@ -38,6 +38,8 @@ def pagerank_program(r: float = 0.15) -> GraphProgram:
       send_message=send,
       apply=apply,
       process_reads_dst=False,
+      inert_message=0.0,  # a zero rank contribution is the add-annihilator
+      lanewise=True,
       name="pagerank")
 
 
@@ -69,8 +71,10 @@ def delta_pagerank_program(r: float = 0.15, tol: float = 1e-6
       reduce_kind="add",
       send_message=send,
       apply=apply,
-      activate=activate,
+      activate=activate,  # |Δ| > tol is already per-lane: batched-ready
       process_reads_dst=False,
+      inert_message=0.0,  # a zero Δ contribution is the add-annihilator
+      lanewise=True,
       name="delta_pagerank")
 
 

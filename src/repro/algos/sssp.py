@@ -27,6 +27,8 @@ def sssp_program() -> GraphProgram:
       apply=lambda red, old: jnp.minimum(red, old),
       process_reads_dst=False,
       needs_recv=False,  # min-relaxation is monotone: APPLY(∞, old) == old
+      inert_message=INF,  # ∞ + w == ∞: the min-plus annihilator
+      lanewise=True,
       name="sssp")
 
 

@@ -236,3 +236,69 @@ def run_graph_program_2d(
         superstep, state)
 
   return loop(init_prop, init_active)
+
+
+def run_graph_program_2d_batched(
+    g: DistGraph, program: GraphProgram, init_prop: PyTree,
+    init_active: Array, mesh: Mesh, *,
+    max_iters: int = 0x7FFFFFF0,
+    row_axes: Sequence[str] = ("data",), col_axis: str = "model"):
+  """Distributed batched multi-query loop (SpMM over the 2-D mesh).
+
+  The query axis (dim 1 of every leaf, ``[n_pad, Q, ...]``) is carried
+  *unsharded* through the 2-D block partitioning: ``P(col)``/``P(row)``
+  constrain only the vertex axis, so each device's local SpMV simply grows a
+  payload axis — the distributed analogue of the local batched engine.
+
+  ``init_prop``/``init_active`` must already be padded to ``g.n_pad``.
+  Requires a batched-ready program (``inert_message`` set, per-lane
+  ``activate``).  Returns the final :class:`BatchedEngineState`.
+  """
+  from repro.core.engine import BatchedEngineState, init_batched_state
+
+  row = tuple(row_axes)
+  rows_spec = row if len(row) > 1 else row[0]
+  prop_sharding = NamedSharding(mesh, P(rows_spec))
+  col_sharding = NamedSharding(mesh, P(col_axis))
+
+  def constrain(tree, sharding):
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.with_sharding_constraint(x, sharding), tree)
+
+  def superstep(state: BatchedEngineState) -> BatchedEngineState:
+    live = jnp.logical_not(state.done)
+    msg = jax.vmap(program.send_message)(state.prop)
+    lane_mask = jnp.logical_and(state.active, live[None, :])
+    msg = spmv_lib.mask_inert(msg, lane_mask, program)
+    # Reshard sources column-wise (P only constrains the vertex axis; the
+    # query axis stays replicated along "model").
+    msg = constrain(msg, col_sharding)
+    vert_active = jax.lax.with_sharding_constraint(
+        jnp.any(lane_mask, axis=1), col_sharding)
+    y, recv = spmv_2d(g, msg, vert_active, state.prop, program, mesh,
+                      row_axes=row, col_axis=col_axis)
+    new_prop = jax.vmap(program.apply)(y, state.prop)
+    if program.needs_recv:
+      new_prop = spmv_lib._tree_where(recv, new_prop, state.prop)
+      changed = jnp.logical_and(recv[:, None],
+                                program.activate(state.prop, new_prop))
+    else:
+      changed = program.activate(state.prop, new_prop)
+    new_prop = constrain(new_prop, prop_sharding)
+    changed = jnp.logical_and(changed, live[None, :])
+    num_active = jnp.sum(changed.astype(jnp.int32), axis=0)
+    return BatchedEngineState(
+        prop=new_prop, active=changed, iteration=state.iteration + 1,
+        done=jnp.logical_or(state.done, num_active == 0),
+        num_active=num_active,
+        iters=state.iters + live.astype(jnp.int32))
+
+  @jax.jit
+  def loop(prop0, active0):
+    state = init_batched_state(prop0, active0)
+    return jax.lax.while_loop(
+        lambda s: jnp.logical_and(s.iteration < max_iters,
+                                  jnp.logical_not(jnp.all(s.done))),
+        superstep, state)
+
+  return loop(init_prop, init_active)

@@ -93,6 +93,153 @@ def run_graph_program(
   return jax.lax.while_loop(cond, body, state)
 
 
+# ---------------------------------------------------------------------------
+# Batched multi-query engine (SpMV → SpMM)
+# ---------------------------------------------------------------------------
+#
+# Q independent queries of the *same* vertex program run as one fused loop:
+# property/message leaves grow a query axis at dim 1 (``[n, Q, ...]``), the
+# frontier becomes ``bool[n, Q]``, and the generalized SpMV becomes a
+# generalized SpMM — every gathered edge is reused across all Q lanes, the
+# arithmetic-intensity lever of GraphBLAST's SpMV→SpMM widening.
+#
+# Per-query frontier masking is folded into the payload: lanes inactive in
+# query q send ``program.inert_message`` (which the program guarantees cannot
+# change any destination), and the backend-level bitvector is the column-OR
+# ``any_q active[:, q]``.  No backend changes are needed — the query axis is
+# just a trailing payload axis to spmv_{dense,coo,ell,pallas}.
+#
+# Convergence is tracked per column: ``done[q]`` latches once query q's
+# frontier empties, and retired columns are hard-masked out of the frontier
+# so they stay inert until the service layer swaps a fresh query into the
+# slot (continuous batching).
+
+
+class BatchedEngineState(NamedTuple):
+  prop: PyTree           # vertex properties, leaves [n, Q, ...]
+  active: Array          # bool[n, Q] per-query frontier
+  iteration: Array       # int32 scalar (global superstep count)
+  done: Array            # bool[Q] latched per-column convergence
+  num_active: Array      # int32[Q] frontier population per query
+  iters: Array           # int32[Q] supersteps each query has been live
+
+
+def init_batched_state(init_prop: PyTree, init_active: Array
+                       ) -> BatchedEngineState:
+  """Build the step-0 batched state from ``[n, Q]``-shaped init values."""
+  num_active = jnp.sum(init_active.astype(jnp.int32), axis=0)
+  q = init_active.shape[1]
+  return BatchedEngineState(
+      prop=init_prop,
+      active=init_active,
+      iteration=jnp.int32(0),
+      done=num_active == 0,
+      num_active=num_active,
+      iters=jnp.zeros((q,), jnp.int32),
+  )
+
+
+def _batched_superstep(graph, program: GraphProgram,
+                       state: BatchedEngineState,
+                       backend: str) -> BatchedEngineState:
+  live = jnp.logical_not(state.done)
+  msg = jax.vmap(program.send_message)(state.prop)      # leaves [n, Q, ...]
+  # Fold the per-query frontier into the payload: inactive lanes (and whole
+  # retired columns) send the inert message.
+  lane_mask = jnp.logical_and(state.active, live[None, :])
+  msg = spmv_lib.mask_inert(msg, lane_mask, program)
+  vert_active = jnp.any(lane_mask, axis=1)              # bool[n] bitvector
+  y, recv = spmv_lib.spmv(graph, msg, vert_active, state.prop, program,
+                          backend=backend, with_recv=program.needs_recv)
+  new_prop = jax.vmap(program.apply)(y, state.prop)
+  if program.needs_recv:
+    # recv is per-vertex (any query delivered); per-lane correctness relies
+    # on the inert-message contract — untouched lanes see an identity-reduced
+    # input and APPLY must leave them unchanged (see GraphProgram docs).
+    new_prop = spmv_lib._tree_where(recv, new_prop, state.prop)
+    changed = jnp.logical_and(recv[:, None],
+                              program.activate(state.prop, new_prop))
+  else:
+    changed = program.activate(state.prop, new_prop)
+  changed = jnp.logical_and(changed, live[None, :])     # retired stay dead
+  num_active = jnp.sum(changed.astype(jnp.int32), axis=0)
+  return BatchedEngineState(
+      prop=new_prop,
+      active=changed,
+      iteration=state.iteration + 1,
+      done=jnp.logical_or(state.done, num_active == 0),
+      num_active=num_active,
+      iters=state.iters + live.astype(jnp.int32),
+  )
+
+
+def run_batched(
+    graph,
+    program: GraphProgram,
+    init_prop: PyTree,
+    init_active: Array,
+    *,
+    max_iters: int = 0x7FFFFFF0,
+    backend: str = "auto",
+) -> BatchedEngineState:
+  """Run Q batched queries of ``program`` until every column converges.
+
+  Args:
+    graph: a DenseGraph, CooGraph or EllGraph.
+    init_prop: vertex-property pytree, leaves ``[n, Q, ...]``.
+    init_active: ``bool[n, Q]`` initial per-query frontiers.
+    max_iters: global superstep cap.
+    backend: SpMV backend selector (auto|dense|coo|ell|pallas).
+
+  The program must be batched-ready: ``inert_message`` set and an
+  ``activate`` rule that preserves the query axis (e.g.
+  :func:`repro.core.vertex_program.lanewise_activate`).
+  """
+  state = init_batched_state(init_prop, init_active)
+
+  def cond(s: BatchedEngineState):
+    return jnp.logical_and(s.iteration < max_iters,
+                           jnp.logical_not(jnp.all(s.done)))
+
+  def body(s: BatchedEngineState):
+    return _batched_superstep(graph, program, s, backend)
+
+  return jax.lax.while_loop(cond, body, state)
+
+
+def run_batched_rounds(graph, program: GraphProgram,
+                       state: BatchedEngineState, num_steps: int,
+                       backend: str = "auto"
+                       ) -> Tuple[BatchedEngineState, Array]:
+  """Advance the batched engine by up to ``num_steps`` supersteps.
+
+  The continuous-batching control point: the service scheduler calls this,
+  inspects ``done`` on the host, retires/refills slots, and calls it again —
+  unconverged columns keep their state across the host round-trip.
+
+  A step where every column is already done is a no-op (state is carried
+  through unchanged) so converged batches don't burn SpMM work while the
+  scheduler drains the queue.
+
+  Returns ``(state, trace)`` where ``trace[t] = int32`` total frontier
+  population at the *end* of step t (-1 for no-op steps) — the per-superstep
+  frontier-occupancy metric.
+  """
+
+  def body(t, carry):
+    s, trace = carry
+    any_live = jnp.logical_not(jnp.all(s.done))
+    s2 = _batched_superstep(graph, program, s, backend)
+    s = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(any_live, a, b), s2, s)
+    trace = trace.at[t].set(
+        jnp.where(any_live, jnp.sum(s.num_active), jnp.int32(-1)))
+    return s, trace
+
+  trace0 = jnp.full((num_steps,), -1, jnp.int32)
+  return jax.lax.fori_loop(0, num_steps, body, (state, trace0))
+
+
 def run_fixed_iters(graph, program: GraphProgram, init_prop: PyTree,
                     init_active: Array, num_iters: int,
                     backend: str = "auto",

@@ -112,6 +112,30 @@ class EllGraph:
     return int(self.cols.shape[0])
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DenseGraph:
+  """O(n²) dense-adjacency container — the oracle, runnable end-to-end.
+
+  ``struct[v, u]`` marks edge u→v with value ``vals[v, u]``.  Routes through
+  :func:`repro.core.spmv.spmv_dense`; only sensible for small graphs, but it
+  exercises the identical engine/program surface as COO/ELL, which makes it
+  the reference backend for equivalence tests (including the batched
+  multi-query engine).
+  """
+
+  n: int                 # static: number of vertices
+  vals: Array            # [n, n] edge values
+  struct: Array          # bool[n, n] structure mask
+
+  def tree_flatten(self):
+    return ((self.vals, self.struct), (self.n,))
+
+  @classmethod
+  def tree_unflatten(cls, aux, children):
+    return cls(aux[0], *children)
+
+
 # ---------------------------------------------------------------------------
 # Host-side constructors (data-pipeline; numpy, not traced).
 # ---------------------------------------------------------------------------
@@ -233,6 +257,13 @@ def dense_adjacency(src, dst, w=None, *, n: int,
   a[dst, src] = w
   s[dst, src] = True
   return jnp.asarray(a), jnp.asarray(s)
+
+
+def build_dense(src, dst, w=None, *, n: int,
+                edge_dtype=jnp.float32) -> DenseGraph:
+  """Build a :class:`DenseGraph` from host edge arrays."""
+  vals, struct = dense_adjacency(src, dst, w, n=n, edge_dtype=edge_dtype)
+  return DenseGraph(n=n, vals=vals, struct=struct)
 
 
 def coo_from_ell(g: EllGraph) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

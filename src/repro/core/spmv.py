@@ -51,6 +51,23 @@ def _tree_where(mask: Array, a: PyTree, b: PyTree) -> PyTree:
       lambda x, y: jnp.where(_bcast_mask(mask, x), x, y), a, b)
 
 
+def mask_inert(msg: PyTree, active: Array, program: GraphProgram) -> PyTree:
+  """Replace inactive lanes of ``msg`` with the program's inert message.
+
+  ``active`` may be ``bool[n]`` (whole-vertex frontier) or ``bool[n, Q]``
+  (per-query lanes, the batched engine's frontier-in-the-payload encoding).
+  Requires ``program.inert_message``.
+  """
+  if program.inert_message is None:
+    raise ValueError(
+        f"program {program.name!r} has no inert_message; batched execution "
+        "requires one (see GraphProgram.inert_message)")
+  return jax.tree_util.tree_map(
+      lambda m, i: jnp.where(_bcast_mask(active, m),
+                             m, jnp.asarray(i, m.dtype)),
+      msg, program.inert_message)
+
+
 def _vmap_process(program: GraphProgram, batch_dims: int):
   f = program.process_message
   for _ in range(batch_dims):
@@ -266,7 +283,11 @@ def spmv_ell(g: graphlib.EllGraph, msg: PyTree, active: Array,
 def spmv(graph, msg: PyTree, active: Array, dst_prop: PyTree,
          program: GraphProgram, *, backend: str = "auto",
          with_recv: bool = True) -> Tuple[PyTree, Optional[Array]]:
-  """Generalized SpMV dispatcher.  ``backend``: auto|coo|ell|pallas."""
+  """Generalized SpMV dispatcher.  ``backend``: auto|dense|coo|ell|pallas."""
+  if isinstance(graph, graphlib.DenseGraph):
+    y, recv = spmv_dense(graph.vals, graph.struct, msg, active, dst_prop,
+                         program)
+    return y, (recv if with_recv else None)
   if backend == "pallas" or (
       backend == "auto" and isinstance(graph, graphlib.EllGraph)
       and _pallas_eligible(graph, msg, dst_prop, program)):

@@ -50,6 +50,27 @@ def _default_activate(old: PyTree, new: PyTree) -> Array:
   return out
 
 
+def lanewise_activate(old: PyTree, new: PyTree) -> Array:
+  """Per-lane activation for batched (multi-query) programs.
+
+  Property leaves carry a query axis at dim 1 (``[n, Q, ...]``); the frontier
+  is ``bool[n, Q]``.  A lane re-activates iff any of *its* payload changed —
+  trailing dims beyond the query axis are reduced, the query axis is kept.
+  """
+  leaves_old = jax.tree_util.tree_leaves(old)
+  leaves_new = jax.tree_util.tree_leaves(new)
+  per_leaf = []
+  for o, n in zip(leaves_old, leaves_new):
+    d = o != n
+    if d.ndim > 2:  # reduce payload dims beyond [n, Q]
+      d = jnp.any(d.reshape(d.shape[0], d.shape[1], -1), axis=-1)
+    per_leaf.append(d)
+  out = per_leaf[0]
+  for d in per_leaf[1:]:
+    out = jnp.logical_or(out, d)
+  return out
+
+
 @dataclasses.dataclass(frozen=True)
 class GraphProgram:
   """A GraphMat vertex program (see module docstring).
@@ -75,6 +96,18 @@ class GraphProgram:
       pass per superstep (a paper-§4.5-style backend optimization).
     num_message_dims: trailing dims of the message payload (0 = scalar,
       1 = vector messages as in CF/TC).
+    inert_message: optional pytree of *scalars* (matching the message
+      structure) that annihilates a lane: the program must guarantee
+      ``APPLY(REDUCE(y, PROCESS(inert, e, d)), old) == APPLY(y, old)`` — i.e.
+      an edge whose source sends the inert message cannot change any
+      destination.  Required for batched (multi-query) execution, where
+      per-query frontier masking is folded into the message payload
+      (inactive lanes send ``inert_message``).  Examples: +∞ for min-plus
+      relaxations (BFS/SSSP), 0.0 for add-reduce rank flows (PageRank).
+    lanewise: declare that process/reduce/apply act independently on each
+      trailing payload lane (no cross-lane mixing, unlike CF's K-factor dot
+      products).  Lets backends tile the payload/query axis — in particular
+      the Pallas kernel's multi-query column tiles.
   """
 
   process_message: Callable[[PyTree, Array, PyTree], PyTree]
@@ -87,6 +120,8 @@ class GraphProgram:
   process_reads_dst: bool = True
   needs_recv: bool = True
   num_message_dims: int = 0
+  inert_message: Optional[PyTree] = None
+  lanewise: bool = False
   name: str = "graph_program"
 
   def __post_init__(self):

@@ -52,14 +52,26 @@ def _identity_scalar(kind: str, dtype):
 
 
 def _kernel(cols_ref, vals_ref, mask_ref, msg_ref, act_ref, dprop_ref,
-            y_ref, recv_ref, *, process, reduce_kind, out_dtype):
-  """One (BR, BW) ELL tile; slot axis (grid dim 1) accumulates into y."""
-  j = pl.program_id(1)
+            y_ref, recv_ref, *, process, reduce_kind, out_dtype,
+            tiled_q: bool = False):
+  """One (BR, BW) ELL tile; the slot axis (innermost grid dim) accumulates
+  into y.  With ``tiled_q`` the grid is (rows, query tiles, slot tiles) and
+  each step sees a (n_src, BQ) message column tile — the multi-query SpMM
+  path (lanewise programs only)."""
+  j = pl.program_id(2) if tiled_q else pl.program_id(1)
 
   @pl.when(j == 0)
   def _init():
     y_ref[...] = jnp.full(
         y_ref.shape, _identity_scalar(reduce_kind, out_dtype), out_dtype)
+
+  # recv is query-independent; its (BR,) block is shared by all query tiles,
+  # so initialize it only on the very first visit.
+  first_recv = (j == 0 if not tiled_q
+                else jnp.logical_and(j == 0, pl.program_id(1) == 0))
+
+  @pl.when(first_recv)
+  def _init_recv():
     recv_ref[...] = jnp.zeros(recv_ref.shape, jnp.int8)
 
   cols = cols_ref[...]                       # [BR, BW] source ids (local)
@@ -100,18 +112,24 @@ def ell_spmv_pallas(
     dprop: Array, *, process: Callable, reduce_kind: str,
     out_dtype=None, out_k: Optional[int] = None,
     block_rows: Optional[int] = None, block_slots: Optional[int] = None,
+    block_queries: Optional[int] = None,
     interpret: Optional[bool] = None) -> Tuple[Array, Array]:
-  """Generalized ELL SpMV.
+  """Generalized ELL SpMV / multi-query SpMM.
 
   Args:
     cols: int32[n_pad, W] packed source indices.
     vals: [n_pad, W] edge values.
     mask: int8/bool[n_pad, W] slot validity.
-    msg:  [n_src, K] message payloads (K=1 for scalar programs).
+    msg:  [n_src, K] message payloads (K=1 for scalar programs; K=Q for
+      batched multi-query lanewise programs).
     active: int8/bool[n_src].
     dprop: [n_pad, Kd] destination properties, already row-permuted.
     process: (m[...,K], e[...], d[...,Kd]) -> r[..., K_out]; traced inline.
     reduce_kind: add | min | max.
+    block_queries: tile the message/output K axis into (n_src, BQ) column
+      tiles — the multi-query SpMM path.  Only valid for *lanewise*
+      processes (no cross-K mixing; requires K_out == K): each grid step
+      then reuses one gathered ELL tile across a BQ-wide query tile.
   Returns:
     (y[n_pad, K_out], recv int8[n_pad]).
   """
@@ -130,8 +148,45 @@ def ell_spmv_pallas(
 
   br = block_rows or _pick_block(n_pad, 256, 8)
   bw = block_slots or _pick_block(w, 512, 8)
-  grid = (n_pad // br, w // bw)
 
+  if block_queries is not None:
+    assert out_k == k, (
+        "block_queries requires a lanewise process (K_out == K); got "
+        f"K={k} K_out={out_k}")
+    bq = min(block_queries, k)
+    assert k % bq == 0, f"block_queries {bq} must divide K={k}"
+    # Grid order (rows, query tiles, slot tiles): the slot axis is innermost
+    # so each y[BR, BQ] tile accumulates across consecutive steps while the
+    # (n_src, BQ) message column tile stays VMEM-resident.
+    grid = (n_pad // br, k // bq, w // bw)
+    kern = functools.partial(
+        _kernel, process=process, reduce_kind=reduce_kind,
+        out_dtype=out_dtype, tiled_q=True)
+    y, recv = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bw), lambda i, q, j: (i, j)),    # cols
+            pl.BlockSpec((br, bw), lambda i, q, j: (i, j)),    # vals
+            pl.BlockSpec((br, bw), lambda i, q, j: (i, j)),    # mask
+            pl.BlockSpec((n_src, bq), lambda i, q, j: (0, q)),  # msg column
+            pl.BlockSpec((n_src,), lambda i, q, j: (0,)),      # active
+            pl.BlockSpec((br, dprop.shape[1]),
+                         lambda i, q, j: (i, 0)),              # dprop
+        ],
+        out_specs=[
+            pl.BlockSpec((br, bq), lambda i, q, j: (i, q)),
+            pl.BlockSpec((br,), lambda i, q, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, k), out_dtype),
+            jax.ShapeDtypeStruct((n_pad,), jnp.int8),
+        ],
+        interpret=interpret,
+    )(cols, vals, mask.astype(jnp.int8), msg, active.astype(jnp.int8), dprop)
+    return y, recv
+
+  grid = (n_pad // br, w // bw)
   kern = functools.partial(
       _kernel, process=process, reduce_kind=reduce_kind, out_dtype=out_dtype)
   y, recv = pl.pallas_call(

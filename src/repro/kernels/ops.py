@@ -16,6 +16,16 @@ Array = jax.Array
 PyTree = Any
 
 
+def _pick_query_block(q: int, target: int = 128) -> int:
+  """Largest divisor of ``q`` that is ≤ target (the lane-width-ish query
+  tile for the multi-query SpMM kernel path)."""
+  best = 1
+  for cand in range(1, min(target, q) + 1):
+    if q % cand == 0:
+      best = cand
+  return best
+
+
 def spmv_ell_pallas(g: graphlib.EllGraph, msg: PyTree, active: Array,
                     dst_prop: PyTree, program: GraphProgram,
                     **kernel_kwargs) -> Tuple[PyTree, Array]:
@@ -53,12 +63,28 @@ def spmv_ell_pallas(g: graphlib.EllGraph, msg: PyTree, active: Array,
       jax.ShapeDtypeStruct(dpp.shape[1:] if not scalar_dp else (), dpp.dtype))
   scalar_result = probe.ndim == 0
 
+  # Lanewise vector payloads (batched multi-query): the user's process is
+  # written per-lane (edge value and dst prop are scalars there), so give
+  # the edge/dst tiles a trailing broadcast axis against the K query lanes.
+  lanewise_vec = program.lanewise and not scalar_msg
+
   def process(mb, eb, db):
     # mb [BR, BW, K], eb [BR, BW], db [BR, BW, Kd] -> r [BR, BW, K_out]
+    if lanewise_vec:
+      r = user_process(mb, eb[..., None], db)
+      return r
     m_in = mb[..., 0] if scalar_msg else mb
     d_in = db[..., 0] if scalar_dp else db
     r = user_process(m_in, eb, d_in)
     return r[..., None] if scalar_result else r
+
+  # Lanewise vector payloads (the batched multi-query SpMM case): tile the
+  # query axis so each gathered ELL tile is reused across a query column
+  # tile instead of requiring the whole [n_src, Q] message block at once.
+  if ("block_queries" not in kernel_kwargs and program.lanewise
+      and not scalar_msg and not scalar_result
+      and not program.process_reads_dst):
+    kernel_kwargs["block_queries"] = _pick_query_block(m2.shape[1])
 
   y2, recv_i8 = ell_spmv_pallas(
       g.cols, g.vals, g.mask, m2, active, dpp,

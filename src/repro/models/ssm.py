@@ -119,7 +119,8 @@ def _shard_mapped_fused_scan(u, dt, a, bmat, cmat, cfg, dp_spec):
     return selective_scan_pallas(u_, dt_, a_, b_, c_,
                                  seq_chunk=cfg.ssm_chunk)
 
-  mesh = jax.sharding.get_abstract_mesh()
+  get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+  mesh = get_mesh() if get_mesh is not None else None
   if mesh is None or mesh.empty or "model" not in mesh.axis_names:
     return local(u, dt, a, bmat, cmat)
   dp = dp_spec

@@ -1,0 +1,14 @@
+"""Multi-query serving: continuous-batched vertex programs (SpMV → SpMM).
+
+Public surface:
+  * :class:`~repro.service.scheduler.GraphQueryServer` — slot-pool server.
+  * Query families: BFS / SSSP / personalized PageRank.
+  * :class:`~repro.service.cache.ResultCache` keyed by graph fingerprint.
+  * :class:`~repro.service.metrics.Counters` — counters + histograms.
+"""
+
+from repro.service.cache import ResultCache, graph_fingerprint  # noqa: F401
+from repro.service.metrics import Counters, Histogram  # noqa: F401
+from repro.service.scheduler import (BfsFamily, GraphQueryServer,  # noqa: F401
+                                     PprFamily, QueryFamily, QuerySpec,
+                                     SsspFamily)

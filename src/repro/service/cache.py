@@ -1,0 +1,70 @@
+"""Result cache for served graph queries.
+
+Keys are ``(graph fingerprint, program name, query spec)`` — a repeated
+query against the same graph snapshot is answered without touching the
+engine.  The fingerprint hashes the actual device arrays (host transfer),
+so a rebuilt-but-identical graph hits and a mutated graph misses; servers
+compute it once at construction.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Any, Hashable, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.service.metrics import Counters
+
+
+def graph_fingerprint(graph) -> str:
+  """Content hash of a graph container (any registered pytree of arrays)."""
+  children, treedef = jax.tree_util.tree_flatten(graph)
+  h = hashlib.sha1()
+  h.update(repr(treedef).encode())
+  for leaf in children:
+    arr = np.asarray(leaf)
+    h.update(str(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    h.update(arr.tobytes())
+  return h.hexdigest()
+
+
+class ResultCache:
+  """LRU cache: ``(fingerprint, program, spec) -> result``."""
+
+  def __init__(self, capacity: int = 4096,
+               counters: Optional[Counters] = None):
+    assert capacity > 0
+    self.capacity = capacity
+    self._store: "OrderedDict[Hashable, Any]" = OrderedDict()
+    self.counters = counters or Counters()
+
+  @staticmethod
+  def make_key(fingerprint: str, program_name: str,
+               spec: Hashable) -> Tuple:
+    return (fingerprint, program_name, spec)
+
+  def get(self, key: Hashable) -> Optional[Any]:
+    if key in self._store:
+      self._store.move_to_end(key)
+      self.counters.inc("cache.hits")
+      return self._store[key]
+    self.counters.inc("cache.misses")
+    return None
+
+  def put(self, key: Hashable, value: Any) -> None:
+    if key in self._store:
+      self._store.move_to_end(key)
+    self._store[key] = value
+    if len(self._store) > self.capacity:
+      self._store.popitem(last=False)
+      self.counters.inc("cache.evictions")
+
+  def __len__(self) -> int:
+    return len(self._store)
+
+  def __contains__(self, key: Hashable) -> bool:
+    return key in self._store

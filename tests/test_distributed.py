@@ -8,7 +8,14 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
+
+# The children drive explicit-sharding meshes (jax.set_mesh /
+# AxisType.Auto); older jax (< 0.6) can't run them at all.
+pytestmark = pytest.mark.skipif(
+    not (hasattr(jax, "set_mesh") and hasattr(jax.sharding, "AxisType")),
+    reason="needs jax.set_mesh / jax.sharding.AxisType (jax >= 0.6)")
 
 _CHILD = r"""
 import os
@@ -65,6 +72,64 @@ def test_distributed_sssp_matches_local():
   assert res.returncode == 0, res.stderr[-3000:]
   results = json.loads(res.stdout.strip().splitlines()[-1])
   assert results == {"4x2": True, "2x2x2": True}, results
+
+
+_BATCHED_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.algos import sssp
+from repro.algos.multi import multi_sssp_program
+from repro.core import graph as G
+from repro.core.distributed import partition_2d, run_graph_program_2d_batched
+from repro.graphs import rmat_edges, remove_self_loops, dedupe_edges
+
+src, dst = rmat_edges(8, 8, seed=3)
+src, dst = remove_self_loops(src, dst)
+src, dst = dedupe_edges(src, dst)
+n = 256
+w = np.random.default_rng(0).uniform(0.1, 2.0, len(src)).astype(np.float32)
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+dg = partition_2d(src, dst, w, n=n, R=4, C=2)
+sources = np.array([3, 77, 130, 200], np.int32)
+q = len(sources)
+d0 = np.full((dg.n_pad, q), np.inf, np.float32)
+a0 = np.zeros((dg.n_pad, q), bool)
+d0[sources, np.arange(q)] = 0.0
+a0[sources, np.arange(q)] = True
+with jax.set_mesh(mesh):
+    fin = run_graph_program_2d_batched(dg, multi_sssp_program(),
+                                       jnp.asarray(d0), jnp.asarray(a0),
+                                       mesh, max_iters=300,
+                                       row_axes=("data",))
+coo = G.build_coo(src, dst, w, n=n)
+seq = np.stack([np.asarray(sssp(coo, int(s), n, backend="coo"))
+                for s in sources], axis=1)
+got = np.asarray(fin.prop)[:n]
+ok = bool(np.allclose(np.nan_to_num(got, posinf=1e30),
+                      np.nan_to_num(seq, posinf=1e30), rtol=1e-5))
+all_done = bool(np.asarray(fin.done).all())
+print("RESULT:" + json.dumps({"ok": ok, "all_done": all_done}))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_batched_multi_sssp_matches_local():
+  """Query axis composes with the 2-D shard_map partitioning: batched
+  distributed SSSP == per-source local runs."""
+  env = dict(os.environ)
+  env["PYTHONPATH"] = os.pathsep.join(
+      [os.path.join(os.path.dirname(__file__), "..", "src"),
+       env.get("PYTHONPATH", "")])
+  res = subprocess.run([sys.executable, "-c", _BATCHED_CHILD], env=env,
+                       capture_output=True, text=True, timeout=900)
+  assert res.returncode == 0, res.stderr[-3000:]
+  line = [l for l in res.stdout.splitlines() if l.startswith("RESULT:")][-1]
+  out = json.loads(line[len("RESULT:"):])
+  assert out == {"ok": True, "all_done": True}, out
 
 
 _ELASTIC_CHILD = r"""
