@@ -4,7 +4,9 @@ Builds an RMAT graph, stands up a :class:`GraphQueryServer`, and pushes a
 burst of BFS and personalized-PageRank traffic through it — demonstrating
 slot-pool continuous batching (converged queries retire mid-flight and
 queued ones swap in), request coalescing, the result cache, and the metrics
-surface.
+surface — then re-runs the BFS traffic from 8 concurrent client threads
+against a :class:`ServerDriver` with deadlines and shed-oldest
+backpressure (the PR-8 concurrent frontend).
 
   PYTHONPATH=src python examples/multi_query_service.py
 """
@@ -12,6 +14,7 @@ surface.
 from __future__ import annotations
 
 import json
+import threading
 
 import jax.numpy as jnp
 import numpy as np
@@ -19,7 +22,8 @@ import numpy as np
 from repro.algos import bfs
 from repro.core import graph as G
 from repro.graphs import dedupe_edges, remove_self_loops, rmat_edges, symmetrize
-from repro.service import (BfsFamily, GraphQueryServer, PprFamily, QuerySpec)
+from repro.service import (BfsFamily, DeadlineExpired, GraphQueryServer,
+                           PprFamily, QueryShed, QuerySpec, ServerDriver)
 
 
 def main():
@@ -65,6 +69,42 @@ def main():
   s2c = ppr_server.stats()["histograms"]["query.supersteps_to_converge"]
   print(f"ppr supersteps-to-converge: mean={s2c['mean']:.1f} "
         f"min={s2c['min']:.0f} max={s2c['max']:.0f}")
+
+  # --- Concurrent clients: 8 threads × 8 queries against a driver thread,
+  # with per-query deadlines and shed-oldest backpressure.
+  cserver = GraphQueryServer(graph, BfsFamily(n), num_slots=8,
+                             steps_per_round=2, max_queue=32,
+                             backpressure="shed-oldest")
+  tally = {"ok": 0, "shed": 0, "expired": 0}
+  tally_lock = threading.Lock()
+
+  def client(tid: int):
+    crng = np.random.default_rng(100 + tid)
+    for s in crng.integers(0, n, 8):
+      qid = cserver.submit(QuerySpec("bfs", int(s)), deadline=30.0)
+      try:
+        got = cserver.result(qid, timeout=60.0)
+        outcome = "ok" if got is not None else "expired"
+      except QueryShed:
+        outcome = "shed"
+      except DeadlineExpired:
+        outcome = "expired"
+      with tally_lock:
+        tally[outcome] += 1
+
+  with ServerDriver(cserver, idle_wait=0.005):
+    threads = [threading.Thread(target=client, args=(t,)) for t in range(8)]
+    for t in threads:
+      t.start()
+    for t in threads:
+      t.join()
+  lat = cserver.stats()["histograms"]["query.latency_ms"]
+  print(f"concurrent bfs: {tally} across {lat['count']} tickets; "
+        f"submit→result latency mean={lat['mean']:.1f}ms max={lat['max']:.0f}ms")
+  print(f"queue high-water={cserver.stats()['gauges'].get('queue.depth.high_water', 0):.0f} "
+        f"shed={cserver.counters.get('queries.shed'):.0f} "
+        f"coalesced={cserver.counters.get('queries.coalesced'):.0f} "
+        f"cache hits={cserver.counters.get('cache.hits'):.0f}")
 
 
 if __name__ == "__main__":

@@ -74,6 +74,23 @@ def ppr_columns(sources: Array, out_deg: Array, r: float
   return prop, active0
 
 
+def bfs_column(source: int, n: int) -> Tuple[Array, Array]:
+  """Single-query BFS init (the Q=1 slice of :func:`bfs_columns`) — what the
+  service layer installs when swapping one query into a slot."""
+  dist0, active0 = bfs_columns(jnp.asarray([source], jnp.int32), n)
+  return dist0[:, 0], active0[:, 0]
+
+
+def sssp_column(source: int, n: int) -> Tuple[Array, Array]:
+  dist0, active0 = sssp_columns(jnp.asarray([source], jnp.int32), n)
+  return dist0[:, 0], active0[:, 0]
+
+
+def ppr_column(source: int, out_deg: Array, r: float) -> Tuple[dict, Array]:
+  prop, active0 = ppr_columns(jnp.asarray([source], jnp.int32), out_deg, r)
+  return jax.tree_util.tree_map(lambda x: x[:, 0], prop), active0[:, 0]
+
+
 def multi_bfs(graph, sources, n: int, *, backend: str = "auto",
               max_iters: int = 0x7FFFFFF0) -> Array:
   """Batched BFS from ``sources`` (int[Q]); returns int32 hops [n, Q]."""

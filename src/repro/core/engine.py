@@ -207,6 +207,31 @@ def run_batched(
   return jax.lax.while_loop(cond, body, state)
 
 
+def mask_columns(state: BatchedEngineState, slots: Array
+                 ) -> BatchedEngineState:
+  """Hard-retire the given columns: clear their frontier and latch ``done``.
+
+  The early-retirement primitive for the service layer — deadline expiry,
+  cancellation, and shutdown all reduce to "stop this column now".  A masked
+  column sends only inert messages from the next superstep on, and lane
+  independence of :func:`_batched_superstep` (each query's messages reduce
+  only into its own column) guarantees the surviving columns' trajectories
+  are bitwise-unchanged.
+
+  Args:
+    slots: ``int32[k]`` slot indices to retire.
+  """
+  slots = jnp.asarray(slots, jnp.int32)
+  return BatchedEngineState(
+      prop=state.prop,
+      active=state.active.at[:, slots].set(False),
+      iteration=state.iteration,
+      done=state.done.at[slots].set(True),
+      num_active=state.num_active.at[slots].set(0),
+      iters=state.iters,
+  )
+
+
 def run_batched_rounds(graph, program: GraphProgram,
                        state: BatchedEngineState, num_steps: int,
                        backend: str = "auto"

@@ -1,14 +1,26 @@
 """Multi-query serving: continuous-batched vertex programs (SpMV → SpMM).
 
 Public surface:
-  * :class:`~repro.service.scheduler.GraphQueryServer` — slot-pool server.
+  * :class:`~repro.service.scheduler.GraphQueryServer` — slot-pool server
+    with a thread-safe submit/result frontend, bounded-queue backpressure
+    (``block`` | ``reject`` | ``shed-oldest``), per-query deadlines and
+    cancellation, and deterministic drain/abort shutdown.
+  * :class:`~repro.service.driver.ServerDriver` — background thread owning
+    the continuous-batching round loop (one driver, many client threads).
   * Query families: BFS / SSSP / personalized PageRank.
-  * :class:`~repro.service.cache.ResultCache` keyed by graph fingerprint.
+  * :class:`~repro.service.cache.ResultCache` keyed by graph fingerprint
+    (thread-safe LRU).
   * :class:`~repro.service.metrics.Counters` — counters + histograms.
+  * :class:`~repro.service.scheduler.QueryError` hierarchy: ``QueryRejected``,
+    ``QueryShed``, ``QueryCancelled``, ``DeadlineExpired``, ``ServerClosed``.
 """
 
 from repro.service.cache import ResultCache, graph_fingerprint  # noqa: F401
+from repro.service.driver import ServerDriver  # noqa: F401
 from repro.service.metrics import Counters, Histogram  # noqa: F401
-from repro.service.scheduler import (BfsFamily, GraphQueryServer,  # noqa: F401
-                                     PprFamily, QueryFamily, QuerySpec,
-                                     SsspFamily)
+from repro.service.scheduler import (BACKPRESSURE_POLICIES,  # noqa: F401
+                                     BfsFamily, DeadlineExpired,
+                                     GraphQueryServer, PprFamily,
+                                     QueryCancelled, QueryError, QueryFamily,
+                                     QueryRejected, QueryShed, QuerySpec,
+                                     ServerClosed, SsspFamily)

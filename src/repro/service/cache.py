@@ -10,6 +10,7 @@ compute it once at construction.
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Any, Hashable, Optional, Tuple
 
@@ -33,13 +34,19 @@ def graph_fingerprint(graph) -> str:
 
 
 class ResultCache:
-  """LRU cache: ``(fingerprint, program, spec) -> result``."""
+  """LRU cache: ``(fingerprint, program, spec) -> result``.
+
+  Thread-safe: the server's submit path (hit check) and retire path
+  (insertion) run on different threads, so every access — including the
+  ``move_to_end`` LRU touch inside :meth:`get` — happens under one lock.
+  """
 
   def __init__(self, capacity: int = 4096,
                counters: Optional[Counters] = None):
     assert capacity > 0
     self.capacity = capacity
     self._store: "OrderedDict[Hashable, Any]" = OrderedDict()
+    self._lock = threading.RLock()
     self.counters = counters or Counters()
 
   @staticmethod
@@ -48,23 +55,27 @@ class ResultCache:
     return (fingerprint, program_name, spec)
 
   def get(self, key: Hashable) -> Optional[Any]:
-    if key in self._store:
-      self._store.move_to_end(key)
-      self.counters.inc("cache.hits")
-      return self._store[key]
-    self.counters.inc("cache.misses")
-    return None
+    with self._lock:
+      if key in self._store:
+        self._store.move_to_end(key)
+        self.counters.inc("cache.hits")
+        return self._store[key]
+      self.counters.inc("cache.misses")
+      return None
 
   def put(self, key: Hashable, value: Any) -> None:
-    if key in self._store:
-      self._store.move_to_end(key)
-    self._store[key] = value
-    if len(self._store) > self.capacity:
-      self._store.popitem(last=False)
-      self.counters.inc("cache.evictions")
+    with self._lock:
+      if key in self._store:
+        self._store.move_to_end(key)
+      self._store[key] = value
+      if len(self._store) > self.capacity:
+        self._store.popitem(last=False)
+        self.counters.inc("cache.evictions")
 
   def __len__(self) -> int:
-    return len(self._store)
+    with self._lock:
+      return len(self._store)
 
   def __contains__(self, key: Hashable) -> bool:
-    return key in self._store
+    with self._lock:
+      return key in self._store

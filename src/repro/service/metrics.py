@@ -67,6 +67,13 @@ class Counters:
     with self._lock:
       self._gauges[name] = float(value)
 
+  def set_gauge_max(self, name: str, value: float) -> None:
+    """Keep the running maximum — high-water-mark gauges (queue depth)."""
+    with self._lock:
+      cur = self._gauges.get(name)
+      if cur is None or value > cur:
+        self._gauges[name] = float(value)
+
   def observe(self, name: str, value: float) -> None:
     with self._lock:
       h = self._hists.get(name)

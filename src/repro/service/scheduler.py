@@ -16,26 +16,90 @@ into the freed slots *without restarting* the unconverged neighbors — slot
 state persists across the host round-trip (continuous batching, not static
 batching).  Per-round and per-superstep metrics land in a
 :class:`~repro.service.metrics.Counters`.
+
+Threading model
+---------------
+
+The frontend is safe for concurrent clients; the engine is single-stepper:
+
+* ``submit`` / ``submit_many`` / ``result`` / ``cancel`` / ``stats`` may be
+  called from **any** thread.  Host-side bookkeeping (admission queue, slot
+  map, waiter lists, tickets, cache) is guarded by one condition variable;
+  each ticket completes a per-query ``threading.Event``, so ``result(qid,
+  timeout=...)`` blocks without polling.
+* ``step_round`` / ``drain`` / ``close`` serialize on an internal *engine
+  lock* — exactly one thread advances the batched device state at a time.
+  Normally that thread is a :class:`~repro.service.driver.ServerDriver`;
+  calling ``drain()`` yourself without a driver (the PR-7 single-threaded
+  pattern) still works.
+* Heavy device work (the jitted round) runs **outside** the bookkeeping
+  lock, so submissions never wait on an SpMM.
+
+Backpressure and deadlines
+--------------------------
+
+``max_queue`` bounds the admission queue.  When it is full a new (uncached,
+uncoalesced) submission follows ``backpressure``: ``"block"`` waits for
+space (optionally up to ``timeout``), ``"reject"`` raises
+:class:`QueryRejected`, ``"shed-oldest"`` drops the oldest queued query
+(its waiters fail with :class:`QueryShed`) to make room — submit never
+blocks.  A per-query ``deadline`` (seconds from submit) fails the ticket
+with :class:`DeadlineExpired` once it lapses: still-queued queries are
+dropped from the queue, in-flight ones are retired mid-flight by masking
+their column's frontier (:func:`repro.core.engine.mask_columns`), which is
+bitwise-invisible to the surviving columns.  Expired/cancelled queries are
+never cached.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from collections import deque
-from typing import Any, Callable, Deque, Dict, Optional, Tuple
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Set, Tuple)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import (BatchedEngineState, init_batched_state,
-                               run_batched_rounds)
+                               mask_columns, run_batched_rounds)
 from repro.core.vertex_program import GraphProgram
 from repro.service.cache import ResultCache, graph_fingerprint
 from repro.service.metrics import Counters
 
 Array = jax.Array
 PyTree = Any
+
+BACKPRESSURE_POLICIES = ("block", "reject", "shed-oldest")
+
+
+class QueryError(RuntimeError):
+  """Base class for query lifecycle failures (stored on the ticket and
+  re-raised from :meth:`GraphQueryServer.result`)."""
+
+
+class QueryRejected(QueryError):
+  """Admission queue full under the ``reject`` policy (or ``block`` timed
+  out)."""
+
+
+class QueryShed(QueryError):
+  """Dropped from a full queue by the ``shed-oldest`` policy."""
+
+
+class QueryCancelled(QueryError):
+  """Explicitly cancelled via :meth:`GraphQueryServer.cancel`."""
+
+
+class DeadlineExpired(QueryError):
+  """The query's deadline lapsed before its column converged."""
+
+
+class ServerClosed(QueryError):
+  """The server was closed (submit after close, or abort-close in flight)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +112,19 @@ class QuerySpec:
   kind: str
   source: int
   params: Tuple = ()
+
+
+@dataclasses.dataclass
+class _Ticket:
+  """Per-submission completion record (one per qid, even when coalesced)."""
+
+  qid: int
+  key: Any
+  event: threading.Event
+  submitted_at: float
+  deadline: Optional[float] = None   # absolute, in clock units
+  value: Any = None
+  error: Optional[BaseException] = None
 
 
 class QueryFamily:
@@ -82,10 +159,8 @@ class BfsFamily(QueryFamily):
     return multi_bfs_program()
 
   def init_column(self, spec: QuerySpec) -> Tuple[PyTree, Array]:
-    from repro.algos.bfs import UNREACHED
-    dist = jnp.full((self.n,), UNREACHED, jnp.int32).at[spec.source].set(0)
-    active = jnp.zeros((self.n,), bool).at[spec.source].set(True)
-    return dist, active
+    from repro.algos.multi import bfs_column
+    return bfs_column(spec.source, self.n)
 
   def extract(self, prop_col: PyTree) -> np.ndarray:
     return np.asarray(prop_col)
@@ -102,9 +177,8 @@ class SsspFamily(QueryFamily):
     return multi_sssp_program()
 
   def init_column(self, spec: QuerySpec) -> Tuple[PyTree, Array]:
-    dist = jnp.full((self.n,), jnp.inf, jnp.float32).at[spec.source].set(0.0)
-    active = jnp.zeros((self.n,), bool).at[spec.source].set(True)
-    return dist, active
+    from repro.algos.multi import sssp_column
+    return sssp_column(spec.source, self.n)
 
   def extract(self, prop_col: PyTree) -> np.ndarray:
     return np.asarray(prop_col)
@@ -126,10 +200,8 @@ class PprFamily(QueryFamily):
     return delta_pagerank_program(r=self.r, tol=self.tol)
 
   def init_column(self, spec: QuerySpec) -> Tuple[PyTree, Array]:
-    seed = jnp.zeros((self.n,), jnp.float32).at[spec.source].set(self.r)
-    prop = {"rank": seed, "delta": seed, "deg": self.out_deg}
-    active = jnp.zeros((self.n,), bool).at[spec.source].set(True)
-    return prop, active
+    from repro.algos.multi import ppr_column
+    return ppr_column(spec.source, self.out_deg, self.r)
 
   def extract(self, prop_col: PyTree) -> np.ndarray:
     return np.asarray(prop_col["rank"])
@@ -148,32 +220,53 @@ class GraphQueryServer:
     backend: SpMV backend selector (auto|dense|coo|ell|pallas).
     max_steps_per_query: safety valve — a slot live this long is
       force-retired with its current (partial) column.
+    max_queue: admission-queue bound (None = unbounded, backpressure off).
+    backpressure: full-queue policy — ``block`` | ``reject`` | ``shed-oldest``.
+    clock: monotonic time source (injectable for deterministic tests).
   """
 
   def __init__(self, graph, family: QueryFamily, *, num_slots: int = 8,
                steps_per_round: int = 4, backend: str = "auto",
                cache: Optional[ResultCache] = None,
                counters: Optional[Counters] = None,
-               max_steps_per_query: int = 100_000):
+               max_steps_per_query: int = 100_000,
+               max_queue: Optional[int] = None,
+               backpressure: str = "block",
+               clock: Callable[[], float] = time.monotonic):
     assert num_slots >= 1 and steps_per_round >= 1
+    if backpressure not in BACKPRESSURE_POLICIES:
+      raise ValueError(f"backpressure must be one of {BACKPRESSURE_POLICIES}")
+    if max_queue is not None and max_queue < 1:
+      raise ValueError("max_queue must be >= 1 (or None for unbounded)")
     self.graph = graph
     self.family = family
     self.num_slots = num_slots
     self.steps_per_round = steps_per_round
     self.backend = backend
     self.max_steps_per_query = max_steps_per_query
+    self.max_queue = max_queue
+    self.backpressure = backpressure
     self.counters = counters or Counters()
     self.cache = cache if cache is not None else ResultCache(
         counters=self.counters)
     self.program = family.program()
     self.fingerprint = graph_fingerprint(graph)
+    self._clock = clock
 
+    # Bookkeeping, all guarded by self._cond (its lock).  The engine state
+    # (_state and the jitted fns below) is advanced only under _engine_lock.
+    self._cond = threading.Condition()
+    self._engine_lock = threading.Lock()
+    self._closed = False
     self._queue: Deque[Tuple[Any, QuerySpec]] = deque()  # (cache key, spec)
     self._results: Dict[int, Any] = {}
     # Concurrent identical queries coalesce: one engine column serves every
     # ticket waiting on the same cache key.
     self._waiters: Dict[Any, list] = {}  # cache key -> [qid, ...]
     self._slot_key: list = [None] * num_slots  # cache key or None per slot
+    self._tickets: Dict[int, _Ticket] = {}
+    self._pending_deadlines: Set[int] = set()
+    self._wake_listeners: List[threading.Event] = []
     self._next_qid = 0
 
     # Batched engine state: all slots start empty (inactive ⇒ done).
@@ -193,6 +286,7 @@ class GraphQueryServer:
     self._extract_fn = jax.jit(
         lambda prop, slot: jax.tree_util.tree_map(
             lambda x: x[:, slot], prop))
+    self._mask_fn = jax.jit(mask_columns)
 
   # -- submission ------------------------------------------------------------
 
@@ -201,12 +295,34 @@ class GraphQueryServer:
         self.fingerprint, self.program.name,
         (spec.kind, spec.source, spec.params))
 
-  def submit(self, spec: QuerySpec) -> int:
-    """Enqueue a query; returns a ticket.
+  def submit(self, spec: QuerySpec, *, deadline: Optional[float] = None,
+             timeout: Optional[float] = None) -> int:
+    """Enqueue a query; returns a ticket (thread-safe).
 
     Cache hits complete instantly; a query identical to one already queued
     or in flight coalesces onto it (one engine column, many tickets).
+
+    Args:
+      deadline: seconds from now after which the query fails with
+        :class:`DeadlineExpired` instead of completing.
+      timeout: under the ``block`` backpressure policy, how long to wait
+        for queue space before raising :class:`QueryRejected`
+        (None = wait indefinitely).
     """
+    with self._cond:
+      return self._submit_locked(spec, deadline, timeout)
+
+  def submit_many(self, specs: Sequence[QuerySpec], *,
+                  deadline: Optional[float] = None,
+                  timeout: Optional[float] = None) -> List[int]:
+    """Bulk submit: one ticket per spec, in order (thread-safe)."""
+    return [self.submit(s, deadline=deadline, timeout=timeout)
+            for s in specs]
+
+  def _submit_locked(self, spec: QuerySpec, deadline: Optional[float],
+                     timeout: Optional[float]) -> int:
+    if self._closed:
+      raise ServerClosed("server is closed")
     if spec.kind != self.family.name:
       raise ValueError(
           f"query kind {spec.kind!r} does not match served family "
@@ -214,34 +330,208 @@ class GraphQueryServer:
     n = getattr(self.family, "n", None)
     if n is not None and not 0 <= spec.source < n:
       raise ValueError(f"source {spec.source} out of range [0, {n})")
+    now = self._clock()
     qid = self._next_qid
     self._next_qid += 1
-    self.counters.inc("queries.submitted")
     key = self._cache_key(spec)
+    ticket = _Ticket(qid=qid, key=key, event=threading.Event(),
+                     submitted_at=now,
+                     deadline=None if deadline is None else now + deadline)
+    self._tickets[qid] = ticket
+    self.counters.inc("queries.submitted")
     hit = self.cache.get(key)
     if hit is not None:
-      self._results[qid] = hit
+      self._settle_locked(ticket, value=hit)
       self.counters.inc("queries.completed")
       return qid
+    if ticket.deadline is not None:
+      self._pending_deadlines.add(qid)
     if key in self._waiters:
       self._waiters[key].append(qid)
       self.counters.inc("queries.coalesced")
       return qid
+    # New key → admission queue, subject to backpressure.
+    if self.max_queue is not None:
+      wait_until = None if timeout is None else now + timeout
+      while (len(self._queue) >= self.max_queue
+             and key not in self._waiters):
+        if self.backpressure == "reject":
+          self.counters.inc("queries.rejected")
+          self._settle_locked(ticket, error=QueryRejected(
+              f"admission queue full ({self.max_queue})"))
+          raise ticket.error
+        if self.backpressure == "shed-oldest":
+          self._shed_oldest_locked()
+          continue
+        # "block": wait for _admit/shed/cancel to free a queue entry.
+        remaining = (None if wait_until is None
+                     else wait_until - self._clock())
+        if remaining is not None and remaining <= 0:
+          self.counters.inc("queries.rejected")
+          self._settle_locked(ticket, error=QueryRejected(
+              f"timed out after {timeout}s waiting for queue space"))
+          raise ticket.error
+        self._cond.wait(remaining)
+        if self._closed:
+          self._settle_locked(ticket, error=ServerClosed(
+              "server closed while waiting for queue space"))
+          raise ticket.error
+        # State may have shifted while we slept: the identical query may
+        # have completed (cache) — coalescing is handled below.
+        if key in self.cache:
+          self._settle_locked(ticket, value=self.cache.get(key))
+          self.counters.inc("queries.completed")
+          return qid
+      if key in self._waiters:
+        # Raced with another submitter of the same key while blocked.
+        self._waiters[key].append(qid)
+        self.counters.inc("queries.coalesced")
+        return qid
     self._waiters[key] = [qid]
     self._queue.append((key, spec))
+    self.counters.inc("queue.enqueued")
+    self.counters.set_gauge_max("queue.depth.high_water", len(self._queue))
+    self._notify_work_locked()
     return qid
 
-  def result(self, qid: int) -> Optional[Any]:
-    """The query's result, or None while it is queued/in flight."""
-    return self._results.get(qid)
+  def _shed_oldest_locked(self) -> None:
+    key, spec = self._queue.popleft()
+    self.counters.inc("queue.removed")
+    for qid in self._waiters.pop(key, []):
+      self.counters.inc("queries.shed")
+      self._settle_locked(self._tickets[qid], error=QueryShed(
+          f"shed from full queue: {spec}"))
+    self._cond.notify_all()
+
+  def _settle_locked(self, ticket: _Ticket, value: Any = None,
+                     error: Optional[BaseException] = None) -> None:
+    """Complete a ticket exactly once (idempotent)."""
+    if ticket.event.is_set():
+      return
+    ticket.value = value
+    ticket.error = error
+    if error is None:
+      self._results[ticket.qid] = value
+    self._pending_deadlines.discard(ticket.qid)
+    self.counters.observe("query.latency_ms",
+                          (self._clock() - ticket.submitted_at) * 1000.0)
+    ticket.event.set()
+    self._cond.notify_all()
+
+  def result(self, qid: int, timeout: Optional[float] = 0.0) -> Optional[Any]:
+    """The query's result; raises the stored :class:`QueryError` on failure.
+
+    ``timeout=0`` (default) polls — returns None while queued/in flight
+    (the PR-7 contract).  ``timeout=None`` blocks until settled;
+    ``timeout=x`` blocks up to x seconds and returns None on timeout.
+    Blocking requires something to be driving rounds (a
+    :class:`~repro.service.driver.ServerDriver` or a ``drain()`` caller).
+    """
+    with self._cond:
+      ticket = self._tickets.get(qid)
+    if ticket is None:
+      raise KeyError(f"unknown query id {qid}")
+    if not ticket.event.wait(timeout):
+      return None
+    if ticket.error is not None:
+      raise ticket.error
+    return ticket.value
+
+  def cancel(self, qid: int) -> bool:
+    """Cancel a pending query; False if it already settled.
+
+    A queued query (whose ticket is the last waiter) is dropped from the
+    queue; an in-flight one is early-retired by masking its column.
+    Coalesced siblings keep the column alive.
+    """
+    with self._engine_lock:
+      with self._cond:
+        ticket = self._tickets.get(qid)
+        if ticket is None or ticket.event.is_set():
+          return False
+        self.counters.inc("queries.cancelled")
+        self._settle_locked(ticket, error=QueryCancelled(
+            f"query {qid} cancelled"))
+        self._remove_waiter_locked(ticket)
+        return True
+
+  def _remove_waiter_locked(self, ticket: _Ticket) -> None:
+    """Detach a settled ticket from its key; last waiter out retires the
+    key (queue removal or in-flight column mask).  Needs the engine lock
+    (may mutate device state)."""
+    waiters = self._waiters.get(ticket.key)
+    if not waiters:
+      return
+    if ticket.qid in waiters:
+      waiters.remove(ticket.qid)
+    if waiters:
+      return
+    del self._waiters[ticket.key]
+    for i, (key, _) in enumerate(self._queue):
+      if key == ticket.key:
+        del self._queue[i]
+        self.counters.inc("queue.removed")
+        self._cond.notify_all()
+        return
+    if ticket.key in self._slot_key:
+      slot = self._slot_key.index(ticket.key)
+      self._slot_key[slot] = None
+      self._state = self._mask_fn(self._state,
+                                  jnp.asarray([slot], jnp.int32))
+      self.counters.inc("slots.early_retired")
 
   @property
   def num_in_flight(self) -> int:
-    return sum(1 for q in self._slot_key if q is not None)
+    with self._cond:
+      return sum(1 for q in self._slot_key if q is not None)
 
   @property
   def num_queued(self) -> int:
-    return len(self._queue)
+    with self._cond:
+      return len(self._queue)
+
+  @property
+  def closed(self) -> bool:
+    with self._cond:
+      return self._closed
+
+  def add_wake_listener(self, event: threading.Event) -> None:
+    """Register an event set whenever new engine work arrives (driver API)."""
+    with self._cond:
+      if event not in self._wake_listeners:
+        self._wake_listeners.append(event)
+
+  def _notify_work_locked(self) -> None:
+    for ev in self._wake_listeners:
+      ev.set()
+
+  # -- deadlines -------------------------------------------------------------
+
+  def expire_deadlines(self, now: Optional[float] = None) -> int:
+    """Fail every pending ticket past its deadline; returns how many.
+
+    Runs automatically at the top of each :meth:`step_round`.
+    """
+    with self._engine_lock:
+      with self._cond:
+        return self._expire_locked(self._clock() if now is None else now)
+
+  def _expire_locked(self, now: float) -> int:
+    expired = 0
+    for qid in list(self._pending_deadlines):
+      ticket = self._tickets[qid]
+      if ticket.event.is_set():
+        self._pending_deadlines.discard(qid)
+        continue
+      if now < ticket.deadline:
+        continue
+      self.counters.inc("queries.deadline_expired")
+      self._settle_locked(ticket, error=DeadlineExpired(
+          f"query {qid} exceeded its "
+          f"{ticket.deadline - ticket.submitted_at:.3f}s deadline"))
+      self._remove_waiter_locked(ticket)
+      expired += 1
+    return expired
 
   # -- continuous batching ---------------------------------------------------
 
@@ -262,7 +552,7 @@ class GraphQueryServer:
         iters=state.iters.at[slot].set(0),
     )
 
-  def _admit(self) -> int:
+  def _admit_locked(self) -> int:
     admitted = 0
     for slot in range(self.num_slots):
       if self._slot_key[slot] is not None or not self._queue:
@@ -275,9 +565,10 @@ class GraphQueryServer:
       admitted += 1
     if admitted:
       self.counters.inc("queries.admitted", admitted)
+      self._cond.notify_all()   # queue space freed → wake blocked submitters
     return admitted
 
-  def _retire(self) -> int:
+  def _retire_locked(self) -> int:
     done = np.asarray(self._state.done)
     iters = np.asarray(self._state.iters)
     retired = 0
@@ -292,54 +583,118 @@ class GraphQueryServer:
       result = self.family.extract(col)
       waiters = self._waiters.pop(key, [])
       for qid in waiters:
-        self._results[qid] = result
+        self._settle_locked(self._tickets[qid], value=result)
       self.cache.put(key, result)
       self._slot_key[slot] = None
       retired += 1
+      self.counters.inc("slots.retired")
       self.counters.inc("queries.completed", float(len(waiters)))
       self.counters.observe("query.supersteps_to_converge",
                             float(iters[slot]))
       if forced:
         self.counters.inc("queries.force_retired")
         # A force-retired column must not keep burning supersteps.
-        self._state = self._state._replace(
-            done=self._state.done.at[slot].set(True),
-            active=self._state.active.at[:, slot].set(False),
-            num_active=self._state.num_active.at[slot].set(0))
+        self._state = self._mask_fn(self._state,
+                                    jnp.asarray([slot], jnp.int32))
+    if retired:
+      self._cond.notify_all()
     return retired
 
-  def step_round(self) -> bool:
-    """One continuous-batching round: admit → batched supersteps → retire.
+  def step_round(self, now: Optional[float] = None) -> bool:
+    """One continuous-batching round: expire → admit → supersteps → retire.
 
-    Returns False when there was nothing to do (idle server).
+    Returns False when there was nothing to do (idle server).  Safe to call
+    concurrently (an engine lock serializes steppers), but intended for a
+    single driver thread.
     """
-    self._admit()
-    if self.num_in_flight == 0:
-      return False
-    self._state, trace = self._round_fn(self._state)
-    self.counters.inc("rounds")
-    trace = np.asarray(trace)
-    real = trace[trace >= 0]
-    self.counters.inc("supersteps", float(real.size))
-    n = jax.tree_util.tree_leaves(self._state.prop)[0].shape[0]
-    for total_active in real:
-      # Frontier occupancy: fraction of the [n, Q] frontier matrix set.
-      self.counters.observe("superstep.frontier_fill",
-                            float(total_active) / float(n * self.num_slots))
-      self.counters.observe("superstep.frontier_active", float(total_active))
-    self.counters.observe("round.slot_utilization",
-                          self.num_in_flight / self.num_slots)
-    self._retire()
-    return True
+    with self._engine_lock:
+      with self._cond:
+        self._expire_locked(self._clock() if now is None else now)
+        self._admit_locked()
+        in_flight = sum(1 for q in self._slot_key if q is not None)
+      if in_flight == 0:
+        return False
+      # The heavy SpMM rounds run outside the bookkeeping lock: submissions
+      # land in the queue while the device crunches.
+      self._state, trace = self._round_fn(self._state)
+      self.counters.inc("rounds")
+      trace = np.asarray(trace)
+      real = trace[trace >= 0]
+      self.counters.inc("supersteps", float(real.size))
+      n = jax.tree_util.tree_leaves(self._state.prop)[0].shape[0]
+      for total_active in real:
+        # Frontier occupancy: fraction of the [n, Q] frontier matrix set.
+        self.counters.observe("superstep.frontier_fill",
+                              float(total_active) / float(n * self.num_slots))
+        self.counters.observe("superstep.frontier_active",
+                              float(total_active))
+      self.counters.observe("round.slot_utilization",
+                            in_flight / self.num_slots)
+      with self._cond:
+        self._retire_locked()
+      return True
 
   def drain(self, max_rounds: int = 100_000) -> Dict[int, Any]:
-    """Run rounds until queue and slots are empty; returns all results."""
+    """Run rounds until queue and slots are empty; returns all successful
+    results (``{qid: value}``)."""
     rounds = 0
-    while (self._queue or self.num_in_flight) and rounds < max_rounds:
+    while (self.num_queued or self.num_in_flight) and rounds < max_rounds:
       if not self.step_round():
         break
       rounds += 1
-    return dict(self._results)
+    with self._cond:
+      return dict(self._results)
+
+  # -- shutdown --------------------------------------------------------------
+
+  def close(self, mode: str = "drain",
+            reason: Optional[BaseException] = None) -> None:
+    """Stop accepting submissions and settle every pending ticket.
+
+    ``mode="drain"`` runs rounds until all pending work completes (in this
+    thread if no driver is stepping; alongside a driver it just waits its
+    turn on the engine lock).  ``mode="abort"`` deterministically fails all
+    queued and in-flight tickets with :class:`ServerClosed` and masks the
+    live columns.  Idempotent.
+    """
+    if mode not in ("drain", "abort"):
+      raise ValueError("close mode must be 'drain' or 'abort'")
+    with self._cond:
+      self._closed = True
+      self._cond.notify_all()      # unblock submitters waiting for space
+      self._notify_work_locked()
+    if mode == "drain":
+      self.drain()
+      return
+    with self._engine_lock:
+      with self._cond:
+        err = ServerClosed("server closed (abort)")
+        if reason is not None:
+          err.__cause__ = reason
+        for ticket in list(self._tickets.values()):
+          if not ticket.event.is_set():
+            self._settle_locked(ticket, error=err)
+        dropped = len(self._queue)
+        if dropped:
+          self.counters.inc("queue.removed", float(dropped))
+        self._queue.clear()
+        self._waiters.clear()
+        live = [s for s, k in enumerate(self._slot_key) if k is not None]
+        if live:
+          self._state = self._mask_fn(self._state,
+                                      jnp.asarray(live, jnp.int32))
+          self.counters.inc("slots.early_retired", float(len(live)))
+          for s in live:
+            self._slot_key[s] = None
+        self._cond.notify_all()
+
+  def __enter__(self) -> "GraphQueryServer":
+    return self
+
+  def __exit__(self, exc_type, exc, tb) -> None:
+    self.close("drain" if exc_type is None else "abort")
+
+  # -- introspection ---------------------------------------------------------
 
   def stats(self) -> dict:
     snap = self.counters.snapshot()
@@ -347,3 +702,16 @@ class GraphQueryServer:
     snap["gauges"]["queue.depth"] = self.num_queued
     snap["gauges"]["cache.size"] = len(self.cache)
     return snap
+
+  def debug_snapshot(self) -> dict:
+    """Consistent view of the bookkeeping (for conformance tests)."""
+    with self._cond:
+      pending = [t.qid for t in self._tickets.values()
+                 if not t.event.is_set()]
+      return {
+          "queued_keys": [k for k, _ in self._queue],
+          "slot_keys": list(self._slot_key),
+          "num_tickets": len(self._tickets),
+          "pending_qids": pending,
+          "closed": self._closed,
+      }
