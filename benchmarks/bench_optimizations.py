@@ -107,6 +107,58 @@ def main(scale: int = 12, ef: int = 8) -> list:
     pop = np.asarray(jnp.sum(dg.emask, axis=-1))
     rows.append(row(f"opt_ladder/5_balance_{tag}", 0.0,
                     f"max/mean={pop.max()/max(pop.mean(),1):.2f}"))
+
+  # 6. planner sweep: time every candidate plan per container and report
+  #    which plan the heuristics vs measurement pick (JSON comment row).
+  rows.extend(planner_sweep(coo, ell, prog, prop, n))
+  return rows
+
+
+def _plan_tag(plan) -> str:
+  tag = plan.backend
+  if plan.num_tiles is not None:
+    tag += f"_t{plan.num_tiles}"
+  for f in ("block_rows", "block_queries"):
+    v = getattr(plan, f)
+    if v is not None:
+      tag += f"_{f.split('_')[1][0]}{v}"
+  return tag
+
+
+def planner_sweep(coo, ell, prog, prop, n, iters: int = 2) -> list:
+  """Sweep :meth:`Planner.candidates` on each container; emit per-candidate
+  timings plus a ``# plan_report`` JSON row mapping graph → picked plans."""
+  import dataclasses
+  import json
+
+  from repro.core.backends import Planner
+
+  rows = []
+  planner = Planner()
+  active = jnp.ones((n,), bool)
+  picks = {}
+  for gname, g in (("coo", coo), ("ell", ell)):
+    stats = planner.stats(g)
+    timed = {}
+    for cand in planner.candidates(g, prog):
+      fn = jax.jit(lambda c=cand: run_fixed_iters(
+          g, prog, prop, active, iters, backend=c))
+      try:
+        us, _ = bench(fn)
+      except Exception:
+        continue  # a candidate that cannot execute this program
+      timed[_plan_tag(cand)] = us / iters
+      rows.append(row(f"planner/{gname}_{_plan_tag(cand)}", us / iters,
+                      f"nnz={stats.nnz} hub_ratio={stats.hub_ratio:.1f}"))
+    tuned = planner.autotune(g, prog, prop, active, num_iters=iters)
+    picks[gname] = {
+        "heuristic": _plan_tag(planner.plan(g, prog)),
+        "autotuned": _plan_tag(tuned),
+        "plan": {k: v for k, v in dataclasses.asdict(tuned).items()
+                 if v is not None},
+        "candidate_us": {k: round(v, 1) for k, v in timed.items()},
+    }
+  rows.append("# plan_report " + json.dumps(picks, sort_keys=True))
   return rows
 
 

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.backends.plan import PlanLike
 from repro.core.engine import run_graph_program
 from repro.core.vertex_program import GraphProgram
 
@@ -34,9 +35,13 @@ def bfs_program() -> GraphProgram:
       name="bfs")
 
 
-def bfs(graph, root: int, n: int, *, backend: str = "auto",
+def bfs(graph, root: int, n: int, *, backend: PlanLike = "auto",
         max_iters: int = 0x7FFFFFF0) -> Array:
-  """Returns int32 hop distances [n] (UNREACHED where unreachable)."""
+  """Returns int32 hop distances [n] (UNREACHED where unreachable).
+
+  ``backend`` accepts a ``repro.core.backends.Plan`` or a legacy name string
+  (both are hashable, so either crosses the jit boundary as a static arg).
+  """
   return _bfs_jit(graph, jnp.int32(root), n=n, backend=backend,
                   max_iters=max_iters)
 

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as graphlib
+from repro.core.backends.plan import PlanLike
 from repro.core.engine import run_fixed_iters
 from repro.core.vertex_program import GraphProgram
 
@@ -64,7 +65,7 @@ def build_bipartite(users: np.ndarray, items: np.ndarray,
 def collaborative_filtering(g_to_users, g_to_items, n: int, k: int, *,
                             num_iters: int = 10, gamma: float = 5e-4,
                             lam: float = 0.05, seed: int = 0,
-                            backend: str = "auto") -> Array:
+                            backend: PlanLike = "auto") -> Array:
   """Run GD sweeps; returns latent factors [n, K] (users then items)."""
   return _cf_jit(g_to_users, g_to_items, n=n, k=k, num_iters=num_iters,
                  gamma=gamma, lam=lam, seed=seed, backend=backend)

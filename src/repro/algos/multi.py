@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.algos.bfs import UNREACHED, bfs_program
 from repro.algos.pagerank import delta_pagerank_program
 from repro.algos.sssp import INF, sssp_program
+from repro.core.backends.plan import PlanLike
 from repro.core.engine import run_batched
 from repro.core.vertex_program import GraphProgram, lanewise_activate
 
@@ -91,9 +92,12 @@ def ppr_column(source: int, out_deg: Array, r: float) -> Tuple[dict, Array]:
   return jax.tree_util.tree_map(lambda x: x[:, 0], prop), active0[:, 0]
 
 
-def multi_bfs(graph, sources, n: int, *, backend: str = "auto",
+def multi_bfs(graph, sources, n: int, *, backend: PlanLike = "auto",
               max_iters: int = 0x7FFFFFF0) -> Array:
-  """Batched BFS from ``sources`` (int[Q]); returns int32 hops [n, Q]."""
+  """Batched BFS from ``sources`` (int[Q]); returns int32 hops [n, Q].
+
+  ``backend``: a ``repro.core.backends.Plan`` or legacy name string.
+  """
   return _multi_bfs_jit(graph, jnp.asarray(sources, jnp.int32), n=n,
                         backend=backend, max_iters=max_iters)
 
@@ -106,7 +110,7 @@ def _multi_bfs_jit(graph, sources, *, n, backend, max_iters):
   return state.prop
 
 
-def multi_sssp(graph, sources, n: int, *, backend: str = "auto",
+def multi_sssp(graph, sources, n: int, *, backend: PlanLike = "auto",
                max_iters: int = 0x7FFFFFF0) -> Array:
   """Batched SSSP from ``sources`` (int[Q]); returns float32 dists [n, Q]."""
   return _multi_sssp_jit(graph, jnp.asarray(sources, jnp.int32), n=n,
@@ -124,7 +128,7 @@ def _multi_sssp_jit(graph, sources, *, n, backend, max_iters):
 def personalized_pagerank(graph, out_deg: Array, sources, *,
                           r: float = 0.15, tol: float = 1e-6,
                           max_iters: int = 100,
-                          backend: str = "auto") -> Array:
+                          backend: PlanLike = "auto") -> Array:
   """Batched personalized PageRank; returns float32 ranks [n, Q].
 
   Fixpoint: ``PR_q = r·e_q + (1-r)·Mᵀ PR_q`` — the random walk restarts at

@@ -17,6 +17,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.backends.plan import PlanLike
 from repro.core.engine import run_fixed_iters, run_graph_program
 from repro.core.vertex_program import GraphProgram
 
@@ -85,12 +86,13 @@ def init_prop(out_deg: Array) -> dict:
 
 
 def pagerank(graph, out_deg: Array, *, num_iters: int = 20, r: float = 0.15,
-             tol: float = 0.0, backend: str = "auto") -> Array:
+             tol: float = 0.0, backend: PlanLike = "auto") -> Array:
   """Run PageRank; returns final ranks [n].
 
   ``tol=0``: the paper's fixed sweeps (init rank 1.0, receivers-only APPLY).
   ``tol>0``: delta-PageRank with a tolerance frontier (init rank r; the
   fixpoint leaves zero-in-degree vertices at r instead of 1.0).
+  ``backend``: a ``repro.core.backends.Plan`` or legacy name string.
   """
   return _pagerank_jit(graph, out_deg, num_iters=num_iters, r=r, tol=tol,
                        backend=backend)

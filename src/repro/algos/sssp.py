@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.backends.plan import PlanLike
 from repro.core.engine import run_graph_program
 from repro.core.vertex_program import GraphProgram
 
@@ -32,9 +33,12 @@ def sssp_program() -> GraphProgram:
       name="sssp")
 
 
-def sssp(graph, source: int, n: int, *, backend: str = "auto",
+def sssp(graph, source: int, n: int, *, backend: PlanLike = "auto",
          max_iters: int = 0x7FFFFFF0) -> Array:
-  """Returns float32 distances [n] (inf where unreachable)."""
+  """Returns float32 distances [n] (inf where unreachable).
+
+  ``backend``: a ``repro.core.backends.Plan`` or legacy name string.
+  """
   return _sssp_jit(graph, jnp.int32(source), n=n, backend=backend,
                    max_iters=max_iters)
 

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backends.plan import PlanLike
 from repro.core.engine import run_fixed_iters
 from repro.core.vertex_program import GraphProgram
 
@@ -76,7 +77,7 @@ def intersect_program() -> GraphProgram:
 
 
 def triangle_count(fwd_graph, rev_graph, n: int, *,
-                   backend: str = "auto") -> Array:
+                   backend: PlanLike = "auto") -> Array:
   """Count triangles of a DAG-oriented graph (build graphs with
   ``repro.graphs.preprocess.dag_orient`` + its reverse).  Returns a scalar
   int32 count (exact)."""

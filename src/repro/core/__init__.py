@@ -10,7 +10,11 @@ from repro.core.graph import (  # noqa: F401
 # NOTE: the generalized-SpMV dispatcher is exported as ``generalized_spmv``
 # so the ``repro.core.spmv`` *module* attribute is not shadowed.
 from repro.core.spmv import spmv as generalized_spmv  # noqa: F401
-from repro.core.spmv import spmv_coo, spmv_dense, spmv_ell  # noqa: F401
+from repro.core.spmv import (  # noqa: F401
+    spmv_coo, spmv_coo_tiled, spmv_dense, spmv_ell)
+from repro.core.backends import (  # noqa: F401
+    AUTO_PLAN, Backend, GraphStats, Plan, PlanCache, PlanLike, Planner,
+    as_plan, compute_stats, get_backend, register, registered_backends)
 from repro.core.engine import (  # noqa: F401
     EngineState, run_fixed_iters, run_graph_program)
 from repro.core.distributed import (  # noqa: F401

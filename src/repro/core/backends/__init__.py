@@ -1,0 +1,31 @@
+"""Execution-plan layer: backend registry + partition-aware planner.
+
+The subsystem GraphMat says backend selection should be (Section 4): the
+framework — not the user — maps a vertex program onto the best sparse-matrix
+execution strategy.  Three pieces:
+
+* :class:`Plan` — static, hashable description of *how* an SpMV runs
+  (backend id + partition/tile parameters); crosses ``jit`` boundaries where
+  the old ``backend="coo"`` string did.  :func:`as_plan` is the coercion
+  shim keeping string call sites working.
+* :class:`Backend` + registry (:func:`register` / :func:`get_backend`) —
+  the single extension point.  Built-ins: dense, coo, coo_tiled (the
+  paper's partitions-≫-threads edge tiling), ell, pallas.
+* :class:`Planner` — graph statistics → plan heuristics, plus a
+  measurement-based :meth:`Planner.autotune` memoized by graph fingerprint.
+"""
+
+from repro.core.backends.plan import (  # noqa: F401
+    AUTO_PLAN, Plan, PlanLike, as_plan)
+from repro.core.backends.base import (  # noqa: F401
+    Backend, get_backend, register, registered_backends, resolve, unregister)
+
+# Importing the built-in backend modules registers them.
+from repro.core.backends import dense as _dense  # noqa: F401
+from repro.core.backends import coo as _coo  # noqa: F401
+from repro.core.backends import coo_tiled as _coo_tiled  # noqa: F401
+from repro.core.backends import ell as _ell  # noqa: F401
+from repro.core.backends import pallas as _pallas  # noqa: F401
+
+from repro.core.backends.planner import (  # noqa: F401
+    GraphStats, PlanCache, Planner, compute_stats)

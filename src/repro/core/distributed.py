@@ -40,6 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import graph as graphlib
 from repro.core import spmv as spmv_lib
+from repro.core.backends.plan import AUTO_PLAN, PlanLike, as_plan
 from repro.core.vertex_program import GraphProgram
 
 Array = jax.Array
@@ -147,17 +148,24 @@ def _semiring_axis_reduce(y: PyTree, recv: Array, axis_name: str,
 def spmv_2d(g: DistGraph, msg: PyTree, active: Array, dst_prop: PyTree,
             program: GraphProgram, mesh: Mesh,
             row_axes: Sequence[str] = ("data",),
-            col_axis: str = "model") -> Tuple[PyTree, Array]:
+            col_axis: str = "model",
+            backend: PlanLike = AUTO_PLAN) -> Tuple[PyTree, Array]:
   """Distributed generalized SpMV over a 2-D (or 3-D w/ pods) mesh.
 
   Shardings (global view):
     * graph blocks: ``P(row_axes, col_axis)`` on the two leading dims,
     * ``msg``/``active``: ``P(col_axis)`` (column-sharded sources),
     * ``dst_prop`` and outputs: ``P(row_axes)`` (row-sharded destinations).
+
+  ``backend`` plans the *per-device block* SpMV.  Blocks are COO, so valid
+  plans are ``coo`` (default under auto) and ``coo_tiled`` — the latter
+  nests the paper's partitions-≫-threads edge tiling *inside* each device
+  block on top of the 2-D mesh partitioning.
   """
   row = tuple(row_axes)
   rows_spec = row if len(row) > 1 else row[0]
   nr = g.rows_per_block
+  plan = as_plan(backend)
 
   def local(bsrc, bdst, bw, bemask, msg_blk, act_blk, prop_blk):
     # shard_map hands us [1, 1, Eb] block slices — drop the unit block dims.
@@ -167,8 +175,8 @@ def spmv_2d(g: DistGraph, msg: PyTree, active: Array, dst_prop: PyTree,
         n=nr, src=bsrc, dst=bdst, w=bw, emask=bemask,
         out_deg=jnp.zeros((nr,), jnp.int32),
         in_deg=jnp.zeros((nr,), jnp.int32))
-    y_part, recv_part = spmv_lib.spmv_coo(
-        local_g, msg_blk, act_blk, prop_blk, program)
+    y_part, recv_part = spmv_lib.spmv(
+        local_g, msg_blk, act_blk, prop_blk, program, backend=plan)
     return _semiring_axis_reduce(y_part, recv_part, col_axis, program)
 
   f = jax.shard_map(
@@ -195,7 +203,8 @@ def run_graph_program_2d(
     g: DistGraph, program: GraphProgram, init_prop: PyTree,
     init_active: Array, mesh: Mesh, *,
     max_iters: int = 0x7FFFFFF0,
-    row_axes: Sequence[str] = ("data",), col_axis: str = "model"):
+    row_axes: Sequence[str] = ("data",), col_axis: str = "model",
+    backend: PlanLike = AUTO_PLAN):
   """Distributed Algorithm 2: the full superstep loop under one jit.
 
   ``init_prop``/``init_active`` must already be padded to ``g.n_pad``.
@@ -206,6 +215,7 @@ def run_graph_program_2d(
 
   row = tuple(row_axes)
   rows_spec = row if len(row) > 1 else row[0]
+  plan = as_plan(backend)
   prop_sharding = NamedSharding(mesh, P(rows_spec))
   col_sharding = NamedSharding(mesh, P(col_axis))
 
@@ -219,7 +229,7 @@ def run_graph_program_2d(
     msg = constrain(msg, col_sharding)
     act = jax.lax.with_sharding_constraint(state.active, col_sharding)
     y, recv = spmv_2d(g, msg, act, state.prop, program, mesh,
-                      row_axes=row, col_axis=col_axis)
+                      row_axes=row, col_axis=col_axis, backend=plan)
     new_prop = jax.vmap(program.apply)(y, state.prop)
     new_prop = spmv_lib._tree_where(recv, new_prop, state.prop)
     new_prop = constrain(new_prop, prop_sharding)
@@ -242,7 +252,8 @@ def run_graph_program_2d_batched(
     g: DistGraph, program: GraphProgram, init_prop: PyTree,
     init_active: Array, mesh: Mesh, *,
     max_iters: int = 0x7FFFFFF0,
-    row_axes: Sequence[str] = ("data",), col_axis: str = "model"):
+    row_axes: Sequence[str] = ("data",), col_axis: str = "model",
+    backend: PlanLike = AUTO_PLAN):
   """Distributed batched multi-query loop (SpMM over the 2-D mesh).
 
   The query axis (dim 1 of every leaf, ``[n_pad, Q, ...]``) is carried
@@ -258,6 +269,7 @@ def run_graph_program_2d_batched(
 
   row = tuple(row_axes)
   rows_spec = row if len(row) > 1 else row[0]
+  plan = as_plan(backend)
   prop_sharding = NamedSharding(mesh, P(rows_spec))
   col_sharding = NamedSharding(mesh, P(col_axis))
 
@@ -276,7 +288,7 @@ def run_graph_program_2d_batched(
     vert_active = jax.lax.with_sharding_constraint(
         jnp.any(lane_mask, axis=1), col_sharding)
     y, recv = spmv_2d(g, msg, vert_active, state.prop, program, mesh,
-                      row_axes=row, col_axis=col_axis)
+                      row_axes=row, col_axis=col_axis, backend=plan)
     new_prop = jax.vmap(program.apply)(y, state.prop)
     if program.needs_recv:
       new_prop = spmv_lib._tree_where(recv, new_prop, state.prop)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import spmv as spmv_lib
+from repro.core.backends.plan import AUTO_PLAN, Plan, PlanLike, as_plan
 from repro.core.vertex_program import GraphProgram
 
 Array = jax.Array
@@ -33,13 +34,13 @@ class EngineState(NamedTuple):
 
 
 def _superstep(graph, program: GraphProgram, state: EngineState,
-               backend: str) -> EngineState:
+               plan: Plan) -> EngineState:
   # SEND_MESSAGE for active vertices (vectorized; inactive lanes annihilated
   # inside the SpMV by the active mask).
   msg = jax.vmap(program.send_message)(state.prop)
   # Generalized SpMV: PROCESS_MESSAGE ⊗ / REDUCE ⊕.
   y, recv = spmv_lib.spmv(graph, msg, state.active, state.prop, program,
-                          backend=backend, with_recv=program.needs_recv)
+                          backend=plan, with_recv=program.needs_recv)
   # APPLY for vertices that received a message.  Monotone programs
   # (needs_recv=False) apply unconditionally: APPLY(identity, old) == old,
   # so the receive mask and its E-sized scatter are skipped entirely.
@@ -64,7 +65,7 @@ def run_graph_program(
     init_active: Array,
     *,
     max_iters: int = 0x7FFFFFF0,
-    backend: str = "auto",
+    backend: PlanLike = AUTO_PLAN,
     unroll_first: bool = False,
 ) -> EngineState:
   """Run ``program`` on ``graph`` until convergence (paper's Algorithm 2).
@@ -74,21 +75,23 @@ def run_graph_program(
     init_prop: vertex-property pytree, leaves ``[n, ...]``.
     init_active: ``bool[n]`` initial frontier.
     max_iters: superstep cap (-1 semantics of the paper = "huge").
-    backend: SpMV backend selector (auto|coo|ell|pallas).
+    backend: execution plan — a :class:`repro.core.backends.Plan`, a
+      registered backend name (legacy string shim), or None/"auto".
     unroll_first: trace one superstep eagerly first (debugging aid).
 
   Returns the final :class:`EngineState`.
   """
+  plan = as_plan(backend)
   n_active0 = jnp.sum(init_active.astype(jnp.int32))
   state = EngineState(init_prop, init_active, jnp.int32(0), n_active0)
   if unroll_first:
-    state = _superstep(graph, program, state, backend)
+    state = _superstep(graph, program, state, plan)
 
   def cond(s: EngineState):
     return jnp.logical_and(s.iteration < max_iters, s.num_active > 0)
 
   def body(s: EngineState):
-    return _superstep(graph, program, s, backend)
+    return _superstep(graph, program, s, plan)
 
   return jax.lax.while_loop(cond, body, state)
 
@@ -141,7 +144,7 @@ def init_batched_state(init_prop: PyTree, init_active: Array
 
 def _batched_superstep(graph, program: GraphProgram,
                        state: BatchedEngineState,
-                       backend: str) -> BatchedEngineState:
+                       plan: Plan) -> BatchedEngineState:
   live = jnp.logical_not(state.done)
   msg = jax.vmap(program.send_message)(state.prop)      # leaves [n, Q, ...]
   # Fold the per-query frontier into the payload: inactive lanes (and whole
@@ -150,7 +153,7 @@ def _batched_superstep(graph, program: GraphProgram,
   msg = spmv_lib.mask_inert(msg, lane_mask, program)
   vert_active = jnp.any(lane_mask, axis=1)              # bool[n] bitvector
   y, recv = spmv_lib.spmv(graph, msg, vert_active, state.prop, program,
-                          backend=backend, with_recv=program.needs_recv)
+                          backend=plan, with_recv=program.needs_recv)
   new_prop = jax.vmap(program.apply)(y, state.prop)
   if program.needs_recv:
     # recv is per-vertex (any query delivered); per-lane correctness relies
@@ -180,7 +183,7 @@ def run_batched(
     init_active: Array,
     *,
     max_iters: int = 0x7FFFFFF0,
-    backend: str = "auto",
+    backend: PlanLike = AUTO_PLAN,
 ) -> BatchedEngineState:
   """Run Q batched queries of ``program`` until every column converges.
 
@@ -189,12 +192,13 @@ def run_batched(
     init_prop: vertex-property pytree, leaves ``[n, Q, ...]``.
     init_active: ``bool[n, Q]`` initial per-query frontiers.
     max_iters: global superstep cap.
-    backend: SpMV backend selector (auto|dense|coo|ell|pallas).
+    backend: execution plan (Plan | backend-name string | None/"auto").
 
   The program must be batched-ready: ``inert_message`` set and an
   ``activate`` rule that preserves the query axis (e.g.
   :func:`repro.core.vertex_program.lanewise_activate`).
   """
+  plan = as_plan(backend)
   state = init_batched_state(init_prop, init_active)
 
   def cond(s: BatchedEngineState):
@@ -202,7 +206,7 @@ def run_batched(
                            jnp.logical_not(jnp.all(s.done)))
 
   def body(s: BatchedEngineState):
-    return _batched_superstep(graph, program, s, backend)
+    return _batched_superstep(graph, program, s, plan)
 
   return jax.lax.while_loop(cond, body, state)
 
@@ -234,7 +238,7 @@ def mask_columns(state: BatchedEngineState, slots: Array
 
 def run_batched_rounds(graph, program: GraphProgram,
                        state: BatchedEngineState, num_steps: int,
-                       backend: str = "auto"
+                       backend: PlanLike = AUTO_PLAN
                        ) -> Tuple[BatchedEngineState, Array]:
   """Advance the batched engine by up to ``num_steps`` supersteps.
 
@@ -251,10 +255,12 @@ def run_batched_rounds(graph, program: GraphProgram,
   frontier-occupancy metric.
   """
 
+  plan = as_plan(backend)
+
   def body(t, carry):
     s, trace = carry
     any_live = jnp.logical_not(jnp.all(s.done))
-    s2 = _batched_superstep(graph, program, s, backend)
+    s2 = _batched_superstep(graph, program, s, plan)
     s = jax.tree_util.tree_map(
         lambda a, b: jnp.where(any_live, a, b), s2, s)
     trace = trace.at[t].set(
@@ -267,18 +273,19 @@ def run_batched_rounds(graph, program: GraphProgram,
 
 def run_fixed_iters(graph, program: GraphProgram, init_prop: PyTree,
                     init_active: Array, num_iters: int,
-                    backend: str = "auto",
+                    backend: PlanLike = AUTO_PLAN,
                     keep_all_active: bool = True) -> EngineState:
   """Fixed-iteration variant (PageRank/CF style) via ``fori_loop``.
 
   ``keep_all_active`` re-arms the full frontier each superstep — the paper
   runs PR/CF as fixed sweeps where every vertex broadcasts every iteration.
   """
+  plan = as_plan(backend)
   state = EngineState(init_prop, init_active, jnp.int32(0),
                       jnp.sum(init_active.astype(jnp.int32)))
 
   def body(_, s):
-    s = _superstep(graph, program, s, backend)
+    s = _superstep(graph, program, s, plan)
     if keep_all_active:
       s = s._replace(active=jnp.ones_like(s.active),
                      num_active=jnp.int32(s.active.shape[0]))

@@ -276,29 +276,129 @@ def spmv_ell(g: graphlib.EllGraph, msg: PyTree, active: Array,
 
 
 # ---------------------------------------------------------------------------
-# Dispatch
+# Partitioned COO: equal-size edge tiles, cache-blocked accumulation
+# ---------------------------------------------------------------------------
+
+
+# Default edge-tile sizing: aim for ~4K-edge tiles (VMEM/cache-blocked
+# gathers and scatters), capped so tiny graphs don't over-fragment.
+TILE_EDGES = 4096
+MAX_TILES = 64
+
+
+def default_num_tiles(capacity: int) -> int:
+  """The paper's "many more partitions than threads" sizing for edge tiles."""
+  return max(1, min(MAX_TILES, -(-capacity // TILE_EDGES)))
+
+
+def spmv_coo_tiled(g: graphlib.CooGraph, msg: PyTree, active: Array,
+                   dst_prop: PyTree, program: GraphProgram, *,
+                   num_tiles: Optional[int] = None,
+                   with_recv: bool = True) -> Tuple[PyTree, Optional[Array]]:
+  """Row-partitioned / cache-blocked COO (the paper's load-balancing trick).
+
+  The dst-sorted edge array is cut into ``num_tiles`` *equal-size* contiguous
+  tiles — perfectly balanced by construction, the static-shape analogue of
+  GraphMat's "many more partitions than threads" — and a ``fori_loop``
+  accumulates each tile into the output with the monoid's scatter fast path.
+  Because edges are dst-sorted, each tile touches a contiguous destination
+  range: the gather of ``dst_prop`` and the scatter into ``y`` are
+  cache/VMEM-blocked instead of striding the whole vertex array.
+
+  Per-destination accumulation order is identical to :func:`spmv_coo`'s
+  single scatter (ascending edge order from the identity), so results are
+  bitwise-equal to the untiled COO backend.
+
+  Requires a scatter-fast monoid (add/min/max/any/all); generic monoids fall
+  back to :func:`spmv_coo` at dispatch (see the registry's ``supports``).
+  """
+  if program.reduce_kind not in _SCATTER_FAST:
+    raise ValueError(
+        f"spmv_coo_tiled requires a scatter-fast reduce, got "
+        f"{program.reduce_kind!r}")
+  cap = g.capacity
+  t = int(num_tiles) if num_tiles else default_num_tiles(cap)
+  t = max(1, min(t, cap))
+  ts = -(-cap // t)
+  pad = t * ts - cap
+
+  def padded(x, fill):
+    if not pad:
+      return x.reshape((t, ts) + x.shape[1:])
+    tail = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, tail]).reshape((t, ts) + x.shape[1:])
+
+  # Padded entries: emask=False annihilates them (their processed value is
+  # the reduce identity, a no-op under scatter-combine); src/dst stay
+  # in-bounds so gathers/scatters never go OOB.
+  src = padded(g.src, graphlib.PAD)
+  dst = padded(g.dst, max(g.n - 1, 0))
+  w = padded(g.w, 0)
+  emask = padded(g.emask, False)
+
+  # Output structure from an abstract eval of PROCESS on one edge.
+  m_el = jax.tree_util.tree_map(
+      lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), msg)
+  e_el = jax.ShapeDtypeStruct(g.w.shape[1:], g.w.dtype)
+  d_el = jax.tree_util.tree_map(
+      lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), dst_prop)
+  r_struct = jax.eval_shape(program.process_message, m_el, e_el, d_el)
+  proto = jax.tree_util.tree_map(
+      lambda s: jnp.zeros((g.n,) + s.shape, s.dtype), r_struct)
+  y0 = program.identity_like(proto)
+  recv0 = jnp.zeros((g.n,), jnp.bool_) if with_recv else None
+
+  kind = program.reduce_kind
+
+  def scatter(acc, idx, leaf):
+    upd = acc.at[idx]
+    if kind == "add":
+      return upd.add(leaf, mode="drop")
+    if kind in ("min", "all"):
+      return upd.min(leaf, mode="drop")
+    return upd.max(leaf, mode="drop")  # max / any
+
+  def body(i, carry):
+    y, recv = carry
+    s_t, d_t, w_t, m_t = src[i], dst[i], w[i], emask[i]
+    m = _tree_gather(msg, s_t)
+    if program.process_reads_dst:
+      dp = _tree_gather(dst_prop, d_t)
+    else:
+      dp = _tree_gather(dst_prop, jnp.zeros_like(d_t))
+    r = _vmap_process(program, 1)(m, w_t, dp)
+    valid = m_t & active[s_t]
+    r = _tree_where(valid, r, program.identity_like(r))
+    y = jax.tree_util.tree_map(
+        lambda acc, leaf: scatter(acc, d_t, leaf), y, r)
+    if recv is not None:
+      recv = recv.at[d_t].max(valid, mode="drop")
+    return y, recv
+
+  y, recv = jax.lax.fori_loop(0, t, body, (y0, recv0))
+  return y, recv
+
+
+# ---------------------------------------------------------------------------
+# Dispatch (plan-based: repro.core.backends owns the registry)
 # ---------------------------------------------------------------------------
 
 
 def spmv(graph, msg: PyTree, active: Array, dst_prop: PyTree,
-         program: GraphProgram, *, backend: str = "auto",
+         program: GraphProgram, *, backend=None,
          with_recv: bool = True) -> Tuple[PyTree, Optional[Array]]:
-  """Generalized SpMV dispatcher.  ``backend``: auto|dense|coo|ell|pallas."""
-  if isinstance(graph, graphlib.DenseGraph):
-    y, recv = spmv_dense(graph.vals, graph.struct, msg, active, dst_prop,
-                         program)
-    return y, (recv if with_recv else None)
-  if backend == "pallas" or (
-      backend == "auto" and isinstance(graph, graphlib.EllGraph)
-      and _pallas_eligible(graph, msg, dst_prop, program)):
-    from repro.kernels import ops as kops  # local import: optional dep
-    y, recv = kops.spmv_ell_pallas(graph, msg, active, dst_prop, program)
-    return y, (recv if with_recv else None)
-  if isinstance(graph, graphlib.EllGraph):
-    return spmv_ell(graph, msg, active, dst_prop, program, with_recv)
-  if isinstance(graph, graphlib.CooGraph):
-    return spmv_coo(graph, msg, active, dst_prop, program, with_recv)
-  raise TypeError(f"unknown graph container {type(graph)}")
+  """Generalized SpMV dispatcher.
+
+  ``backend`` is a :class:`repro.core.backends.Plan`, a registered backend
+  name (legacy string shim), or None/"auto" for structural selection.  The
+  registry (:mod:`repro.core.backends`) resolves the executing backend; the
+  old if/elif chain lives on as the built-ins' ``supports``/``eligible``
+  predicates.
+  """
+  from repro.core import backends as backends_lib  # lazy: avoid import cycle
+  plan = backends_lib.as_plan(backend)
+  impl = backends_lib.resolve(plan, graph, msg, dst_prop, program)
+  return impl.execute(graph, msg, active, dst_prop, program, plan, with_recv)
 
 
 def _pallas_eligible(g: graphlib.EllGraph, msg: PyTree, dst_prop: PyTree,

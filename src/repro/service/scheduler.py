@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backends import Plan, PlanLike, Planner, as_plan
 from repro.core.engine import (BatchedEngineState, init_batched_state,
                                mask_columns, run_batched_rounds)
 from repro.core.vertex_program import GraphProgram
@@ -217,7 +218,13 @@ class GraphQueryServer:
     steps_per_round: supersteps fused per jit call — the continuous-batching
       scheduling quantum.  Small = responsive swap-in, large = less host
       round-trip overhead.
-    backend: SpMV backend selector (auto|dense|coo|ell|pallas).
+    backend: execution plan for the batched SpMV — a
+      :class:`repro.core.backends.Plan` or a legacy name string.  On
+      ``"auto"`` (default) the server asks its :class:`Planner` for a plan
+      from the graph's statistics (Q = ``num_slots``); the resolved plan is
+      exposed as :attr:`plan` and recomputed by :meth:`swap_graph`.
+    planner: the :class:`~repro.core.backends.Planner` consulted when the
+      requested backend is "auto" (shared planners share their plan cache).
     max_steps_per_query: safety valve — a slot live this long is
       force-retired with its current (partial) column.
     max_queue: admission-queue bound (None = unbounded, backpressure off).
@@ -226,7 +233,8 @@ class GraphQueryServer:
   """
 
   def __init__(self, graph, family: QueryFamily, *, num_slots: int = 8,
-               steps_per_round: int = 4, backend: str = "auto",
+               steps_per_round: int = 4, backend: PlanLike = "auto",
+               planner: Optional[Planner] = None,
                cache: Optional[ResultCache] = None,
                counters: Optional[Counters] = None,
                max_steps_per_query: int = 100_000,
@@ -238,11 +246,11 @@ class GraphQueryServer:
       raise ValueError(f"backpressure must be one of {BACKPRESSURE_POLICIES}")
     if max_queue is not None and max_queue < 1:
       raise ValueError("max_queue must be >= 1 (or None for unbounded)")
-    self.graph = graph
     self.family = family
     self.num_slots = num_slots
     self.steps_per_round = steps_per_round
-    self.backend = backend
+    self._requested = as_plan(backend)
+    self.planner = planner if planner is not None else Planner()
     self.max_steps_per_query = max_steps_per_query
     self.max_queue = max_queue
     self.backpressure = backpressure
@@ -250,7 +258,6 @@ class GraphQueryServer:
     self.cache = cache if cache is not None else ResultCache(
         counters=self.counters)
     self.program = family.program()
-    self.fingerprint = graph_fingerprint(graph)
     self._clock = clock
 
     # Bookkeeping, all guarded by self._cond (its lock).  The engine state
@@ -269,24 +276,64 @@ class GraphQueryServer:
     self._wake_listeners: List[threading.Event] = []
     self._next_qid = 0
 
-    # Batched engine state: all slots start empty (inactive ⇒ done).
-    proto_prop, _ = family.init_column(QuerySpec(family.name, 0))
-    prop0 = jax.tree_util.tree_map(
-        lambda x: jnp.zeros((x.shape[0], num_slots) + x.shape[1:], x.dtype),
-        proto_prop)
-    n = jax.tree_util.tree_leaves(proto_prop)[0].shape[0]
-    active0 = jnp.zeros((n, num_slots), bool)
-    self._state = init_batched_state(prop0, active0)
-
-    self._round_fn = jax.jit(
-        lambda st: run_batched_rounds(self.graph, self.program, st,
-                                      self.steps_per_round,
-                                      backend=self.backend))
     self._install_fn = jax.jit(self._install)
     self._extract_fn = jax.jit(
         lambda prop, slot: jax.tree_util.tree_map(
             lambda x: x[:, slot], prop))
     self._mask_fn = jax.jit(mask_columns)
+    self._reset_engine_locked(graph)
+
+  def _make_plan(self, graph) -> Plan:
+    """Resolve the requested backend into this server's concrete plan."""
+    if self._requested.is_auto:
+      return self.planner.plan(graph, self.program, q=self.num_slots)
+    return self._requested
+
+  def _reset_engine_locked(self, graph) -> None:
+    """(Re)bind the server to a graph: fingerprint, plan, state, round fn."""
+    self.graph = graph
+    self.fingerprint = graph_fingerprint(graph)
+    self.plan = self._make_plan(graph)
+    # Legacy alias: callers that read ``server.backend`` see the plan.
+    self.backend = self.plan
+
+    # Batched engine state: all slots start empty (inactive ⇒ done).
+    family = self.family
+    proto_prop, _ = family.init_column(QuerySpec(family.name, 0))
+    prop0 = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(
+            (x.shape[0], self.num_slots) + x.shape[1:], x.dtype),
+        proto_prop)
+    n = jax.tree_util.tree_leaves(proto_prop)[0].shape[0]
+    active0 = jnp.zeros((n, self.num_slots), bool)
+    self._state = init_batched_state(prop0, active0)
+
+    self._round_fn = jax.jit(
+        lambda st: run_batched_rounds(self.graph, self.program, st,
+                                      self.steps_per_round,
+                                      backend=self.plan))
+
+  def swap_graph(self, graph) -> Plan:
+    """Replace the served graph with a new snapshot (idle servers only).
+
+    Re-fingerprints, re-plans (when the requested backend is "auto"), and
+    rebuilds the engine state and jitted round function.  The result cache
+    is *kept* — its keys embed the graph fingerprint, so entries for the old
+    snapshot stay correct and entries for a previously-served snapshot are
+    revived for free.  Raises RuntimeError if queries are queued or in
+    flight (drain first).  Returns the new plan.
+    """
+    with self._engine_lock:
+      with self._cond:
+        if self._closed:
+          raise ServerClosed("server is closed")
+        if self._queue or any(k is not None for k in self._slot_key):
+          raise RuntimeError(
+              "swap_graph requires an idle server: drain() queued and "
+              "in-flight queries first")
+        self._reset_engine_locked(graph)
+        self.counters.inc("graph.swaps")
+        return self.plan
 
   # -- submission ------------------------------------------------------------
 
