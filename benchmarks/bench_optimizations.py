@@ -111,6 +111,10 @@ def main(scale: int = 12, ef: int = 8) -> list:
   # 6. planner sweep: time every candidate plan per container and report
   #    which plan the heuristics vs measurement pick (JSON comment row).
   rows.extend(planner_sweep(coo, ell, prog, prop, n))
+
+  # 7. admission sweep: FIFO vs weighted fair share under tenant saturation
+  #    (JSON comment row with per-tenant p50/p95 latency).
+  rows.extend(admission_sweep(ell, n))
   return rows
 
 
@@ -159,6 +163,54 @@ def planner_sweep(coo, ell, prog, prop, n, iters: int = 2) -> list:
         "candidate_us": {k: round(v, 1) for k, v in timed.items()},
     }
   rows.append("# plan_report " + json.dumps(picks, sort_keys=True))
+  return rows
+
+
+def admission_sweep(graph, n, per_tenant: int = 16) -> list:
+  """Saturate a 2-tenant server under FIFO vs weighted fair share and
+  report the per-tenant completed split plus p50/p95 submit→result latency
+  as a ``# admission_report`` JSON row.
+
+  Under FIFO a burst-first heavy tenant starves the light one; fair share
+  (weights gold=3, free=1) holds the completed split near 3:1 while both
+  stay backlogged.
+  """
+  import json
+
+  from repro.service import (BfsFamily, Counters, FairSharePolicy,
+                             GraphQueryServer, QuerySpec)
+
+  rows = []
+  weights = {"gold": 3.0, "free": 1.0}
+  report = {}
+  for policy_name, policy in (("fifo", "fifo"),
+                              ("fair", FairSharePolicy(weights=weights))):
+    server = GraphQueryServer(graph, BfsFamily(n), num_slots=4,
+                              steps_per_round=4, admission=policy)
+    for i in range(per_tenant):  # interleaved arrivals, disjoint sources
+      server.submit(QuerySpec("bfs", i, tenant="gold"))
+      server.submit(QuerySpec("bfs", per_tenant + i, tenant="free"))
+    while min(server.debug_snapshot()["tenant_depth"].get(t, 0)
+              for t in weights) > 2:
+      server.step_round()
+    mid = {t: int(server.counters.get_labeled("queries.completed", tenant=t))
+           for t in weights}
+    server.drain()
+    tenants = {}
+    for t in weights:
+      h = server.counters.hist(
+          Counters.label_name("query.latency_ms", tenant=t))
+      tenants[t] = {
+          "completed_at_saturation": mid[t],
+          "p50_ms": round(h.percentile(0.5), 2),
+          "p95_ms": round(h.percentile(0.95), 2),
+      }
+    report[policy_name] = {"weights": weights, "tenants": tenants}
+    rows.append(row(
+        f"admission/{policy_name}", 0.0,
+        " ".join(f"{t}:done={v['completed_at_saturation']}"
+                 f",p95={v['p95_ms']}ms" for t, v in tenants.items())))
+  rows.append("# admission_report " + json.dumps(report, sort_keys=True))
   return rows
 
 

@@ -5,16 +5,26 @@ Public surface:
     with a thread-safe submit/result frontend, bounded-queue backpressure
     (``block`` | ``reject`` | ``shed-oldest``), per-query deadlines and
     cancellation, and deterministic drain/abort shutdown.
+  * :class:`~repro.service.admission.AdmissionPolicy` — pluggable admission
+    ordering: :class:`FifoPolicy` (default), :class:`PriorityPolicy`
+    (strict classes, optional EDF), :class:`FairSharePolicy` (per-tenant
+    weighted fair queuing with per-tenant bounds).
   * :class:`~repro.service.driver.ServerDriver` — background thread owning
-    the continuous-batching round loop (one driver, many client threads).
+    the continuous-batching round loop (one driver, many client threads;
+    urgency-ordered scans).
   * Query families: BFS / SSSP / personalized PageRank.
   * :class:`~repro.service.cache.ResultCache` keyed by graph fingerprint
     (thread-safe LRU).
-  * :class:`~repro.service.metrics.Counters` — counters + histograms.
+  * :class:`~repro.service.metrics.Counters` — counters + histograms, with
+    per-tenant / per-class labeled series.
   * :class:`~repro.service.scheduler.QueryError` hierarchy: ``QueryRejected``,
     ``QueryShed``, ``QueryCancelled``, ``DeadlineExpired``, ``ServerClosed``.
 """
 
+from repro.service.admission import (ADMISSION_POLICIES,  # noqa: F401
+                                     AdmissionPolicy, AdmissionRequest,
+                                     FairSharePolicy, FifoPolicy,
+                                     PriorityPolicy, make_policy)
 from repro.service.cache import ResultCache, graph_fingerprint  # noqa: F401
 from repro.service.driver import ServerDriver  # noqa: F401
 from repro.service.metrics import Counters, Histogram  # noqa: F401

@@ -54,14 +54,20 @@ class ResultCache:
                spec: Hashable) -> Tuple:
     return (fingerprint, program_name, spec)
 
-  def get(self, key: Hashable) -> Optional[Any]:
+  def get(self, key: Hashable, default: Any = None) -> Optional[Any]:
+    """Lookup with an LRU touch; returns ``default`` on miss.
+
+    Pass a sentinel as ``default`` to distinguish a miss from a cached
+    falsy value — callers must never pair ``in`` with a separate ``get``
+    (an eviction can land between the two calls).
+    """
     with self._lock:
       if key in self._store:
         self._store.move_to_end(key)
         self.counters.inc("cache.hits")
         return self._store[key]
       self.counters.inc("cache.misses")
-      return None
+      return default
 
   def put(self, key: Hashable, value: Any) -> None:
     with self._lock:

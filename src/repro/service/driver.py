@@ -11,6 +11,11 @@ The driver sleeps when every server is idle and is woken by a per-driver
 event that servers set on new submissions (registered via
 ``add_wake_listener``), so idle CPU burn is bounded by ``idle_wait``
 polling — which also bounds how stale a deadline check can go while idle.
+A submission wakes the driver regardless of its priority; with several
+servers, each scan pass visits them in descending queued-urgency order
+(``GraphQueryServer.queued_urgency`` — the admission policy's highest
+queued priority class), so a high-priority arrival on one server is not
+stuck behind full rounds on its idle-queue siblings.
 
 Shutdown is deterministic: ``close("drain")`` waits until every server's
 queue and slot pool empty, then stops the thread and drain-closes the
@@ -57,10 +62,18 @@ class ServerDriver:
     self._thread.start()
     return self
 
+  def _scan_order(self) -> List[GraphQueryServer]:
+    """Servers for one pass, most-urgent queued work first (stable)."""
+    if len(self._servers) <= 1:
+      return self._servers
+    urgency = [(s.queued_urgency(), i) for i, s in enumerate(self._servers)]
+    return [self._servers[i] for u, i in
+            sorted(urgency, key=lambda t: (t[0] is None, -(t[0] or 0), t[1]))]
+
   def _run(self) -> None:
     while not self._stop_evt.is_set():
       did_work = False
-      for server in self._servers:
+      for server in self._scan_order():
         if self._stop_evt.is_set():
           return
         try:

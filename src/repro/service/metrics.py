@@ -43,6 +43,24 @@ class Histogram:
   def mean(self) -> float:
     return self.total / self.count if self.count else 0.0
 
+  def percentile(self, q: float) -> float:
+    """Approximate q-quantile (q in [0, 1]) from the bucket upper bounds.
+
+    Returns the upper bound of the first bucket whose cumulative count
+    reaches ``q * count`` (the observed max for the +inf bucket); 0.0 when
+    empty.  Power-of-two buckets make this a ≤2x overestimate — good enough
+    for p50/p95 latency reporting.
+    """
+    if not self.count:
+      return 0.0
+    target = q * self.count
+    seen = 0
+    for bound, c in zip(self.bounds, self.bucket_counts):
+      seen += c
+      if seen >= target and c:
+        return float(self.max if math.isinf(bound) else bound)
+    return float(self.max)
+
   def snapshot(self) -> dict:
     nonzero = {("inf" if math.isinf(b) else int(b)): c
                for b, c in zip(self.bounds, self.bucket_counts) if c}
@@ -51,7 +69,12 @@ class Histogram:
 
 
 class Counters:
-  """A named bag of counters, gauges and histograms (thread-safe)."""
+  """A named bag of counters, gauges and histograms (thread-safe).
+
+  Labeled variants (``inc_labeled`` / ``observe_labeled`` / ``get_labeled``)
+  record under a canonical ``name{k=v,...}`` key (labels sorted), giving
+  per-tenant / per-priority-class breakdowns next to the unlabeled totals.
+  """
 
   def __init__(self):
     self._lock = threading.Lock()
@@ -59,9 +82,29 @@ class Counters:
     self._gauges: Dict[str, float] = {}
     self._hists: Dict[str, Histogram] = {}
 
+  @staticmethod
+  def label_name(name: str, **labels) -> str:
+    """Canonical key for a labeled series: ``name{k=v,...}``, keys sorted."""
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
   def inc(self, name: str, value: float = 1.0) -> None:
     with self._lock:
       self._counters[name] = self._counters.get(name, 0.0) + value
+
+  def inc_labeled(self, name: str, value: float = 1.0, **labels) -> None:
+    self.inc(self.label_name(name, **labels), value)
+
+  def get_labeled(self, name: str, **labels) -> float:
+    return self.get(self.label_name(name, **labels))
+
+  def observe_labeled(self, name: str, value: float, **labels) -> None:
+    self.observe(self.label_name(name, **labels), value)
+
+  def hist(self, name: str) -> Optional[Histogram]:
+    """The named histogram (None if never observed)."""
+    with self._lock:
+      return self._hists.get(name)
 
   def set_gauge(self, name: str, value: float) -> None:
     with self._lock:

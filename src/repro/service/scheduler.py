@@ -35,20 +35,41 @@ The frontend is safe for concurrent clients; the engine is single-stepper:
 * Heavy device work (the jitted round) runs **outside** the bookkeeping
   lock, so submissions never wait on an SpMM.
 
-Backpressure and deadlines
---------------------------
+Admission control, backpressure, deadlines
+------------------------------------------
 
-``max_queue`` bounds the admission queue.  When it is full a new (uncached,
-uncoalesced) submission follows ``backpressure``: ``"block"`` waits for
-space (optionally up to ``timeout``), ``"reject"`` raises
-:class:`QueryRejected`, ``"shed-oldest"`` drops the oldest queued query
-(its waiters fail with :class:`QueryShed`) to make room — submit never
-blocks.  A per-query ``deadline`` (seconds from submit) fails the ticket
+The admission queue's ordering is a pluggable
+:class:`~repro.service.admission.AdmissionPolicy` (``admission=`` at
+construction): ``"fifo"`` (default — arrival order, the original behavior),
+``"priority"`` / ``"priority-edf"`` (strict classes by
+``QuerySpec.priority``, FIFO or earliest-deadline-first within a class), or
+``"fair"`` (per-tenant deficit-round-robin weighted by
+:class:`~repro.service.admission.FairSharePolicy` weights, with optional
+per-tenant queue bounds).  ``QuerySpec.tenant`` / ``QuerySpec.priority``
+feed the policy; neither is part of the cache key, so identical queries
+from different tenants still coalesce and share cached results.
+
+``max_queue`` bounds the admission queue.  When it is full — or the policy
+reports a per-tenant bound hit — a new (uncached, uncoalesced) submission
+follows ``backpressure``: ``"block"`` waits for space (optionally up to
+``timeout``), ``"reject"`` raises :class:`QueryRejected`,
+``"shed-oldest"`` drops the policy's chosen victim (its waiters fail with
+:class:`QueryShed`) to make room — submit never blocks.  Under FIFO the
+victim is the oldest queued query (the original shed-oldest); priority
+sheds from the lowest class and fair-share from the most over-share
+tenant.  A per-query ``deadline`` (seconds from submit) fails the ticket
 with :class:`DeadlineExpired` once it lapses: still-queued queries are
 dropped from the queue, in-flight ones are retired mid-flight by masking
 their column's frontier (:func:`repro.core.engine.mask_columns`), which is
 bitwise-invisible to the surviving columns.  Expired/cancelled queries are
-never cached.
+never cached, and neither is the *partial* column of a query force-retired
+at ``max_steps_per_query``.
+
+Settled tickets are garbage-collected: once :meth:`result` has delivered a
+ticket's outcome it is retained only up to ``retain_delivered`` more
+deliveries; settled-but-never-collected tickets are bounded by
+``retain_settled`` (oldest evicted first).  ``result`` on an evicted qid
+raises KeyError — collect results promptly or raise the retention bounds.
 """
 
 from __future__ import annotations
@@ -68,6 +89,8 @@ from repro.core.backends import Plan, PlanLike, Planner, as_plan
 from repro.core.engine import (BatchedEngineState, init_batched_state,
                                mask_columns, run_batched_rounds)
 from repro.core.vertex_program import GraphProgram
+from repro.service.admission import (AdmissionPolicy, AdmissionRequest,
+                                     PolicyLike, make_policy)
 from repro.service.cache import ResultCache, graph_fingerprint
 from repro.service.metrics import Counters
 
@@ -75,6 +98,10 @@ Array = jax.Array
 PyTree = Any
 
 BACKPRESSURE_POLICIES = ("block", "reject", "shed-oldest")
+
+# Distinguishes "not cached" from any cached value on ResultCache.get —
+# never pair `in cache` with a separate get (eviction can race between).
+_CACHE_MISS = object()
 
 
 class QueryError(RuntimeError):
@@ -107,12 +134,17 @@ class ServerClosed(QueryError):
 class QuerySpec:
   """One serveable query: a (kind, source, params) triple.
 
-  ``params`` must be hashable (it is part of the cache key).
+  ``params`` must be hashable (it is part of the cache key).  ``tenant``
+  and ``priority`` feed the admission policy only — they are *not* part of
+  the cache key, so the same logical query submitted by different tenants
+  or at different priorities coalesces and shares cached results.
   """
 
   kind: str
   source: int
   params: Tuple = ()
+  tenant: str = "default"
+  priority: int = 0
 
 
 @dataclasses.dataclass
@@ -124,6 +156,8 @@ class _Ticket:
   event: threading.Event
   submitted_at: float
   deadline: Optional[float] = None   # absolute, in clock units
+  tenant: str = "default"
+  priority: int = 0
   value: Any = None
   error: Optional[BaseException] = None
 
@@ -226,9 +260,20 @@ class GraphQueryServer:
     planner: the :class:`~repro.core.backends.Planner` consulted when the
       requested backend is "auto" (shared planners share their plan cache).
     max_steps_per_query: safety valve — a slot live this long is
-      force-retired with its current (partial) column.
-    max_queue: admission-queue bound (None = unbounded, backpressure off).
-    backpressure: full-queue policy — ``block`` | ``reject`` | ``shed-oldest``.
+      force-retired with its current (partial) column.  Partial results are
+      delivered to waiters but never cached.
+    max_queue: admission-queue bound (None = unbounded; per-tenant policy
+      bounds still apply).
+    backpressure: full-queue policy — ``block`` | ``reject`` | ``shed-oldest``
+      (the shed victim is chosen by the admission policy; FIFO = oldest).
+    admission: admission-queue ordering — an
+      :class:`~repro.service.admission.AdmissionPolicy` instance or a name
+      (``"fifo"`` default | ``"priority"`` | ``"priority-edf"`` |
+      ``"fair"``).
+    retain_delivered: settled tickets already delivered by :meth:`result`
+      kept before garbage collection (bounds ``_tickets`` growth).
+    retain_settled: settled-but-never-collected tickets kept (oldest
+      evicted first, delivered ones before undelivered).
     clock: monotonic time source (injectable for deterministic tests).
   """
 
@@ -240,12 +285,17 @@ class GraphQueryServer:
                max_steps_per_query: int = 100_000,
                max_queue: Optional[int] = None,
                backpressure: str = "block",
+               admission: PolicyLike = None,
+               retain_delivered: int = 4096,
+               retain_settled: int = 65536,
                clock: Callable[[], float] = time.monotonic):
     assert num_slots >= 1 and steps_per_round >= 1
     if backpressure not in BACKPRESSURE_POLICIES:
       raise ValueError(f"backpressure must be one of {BACKPRESSURE_POLICIES}")
     if max_queue is not None and max_queue < 1:
       raise ValueError("max_queue must be >= 1 (or None for unbounded)")
+    if retain_delivered < 0 or retain_settled < 1:
+      raise ValueError("retain_delivered must be >= 0, retain_settled >= 1")
     self.family = family
     self.num_slots = num_slots
     self.steps_per_round = steps_per_round
@@ -254,6 +304,8 @@ class GraphQueryServer:
     self.max_steps_per_query = max_steps_per_query
     self.max_queue = max_queue
     self.backpressure = backpressure
+    self.retain_delivered = retain_delivered
+    self.retain_settled = retain_settled
     self.counters = counters or Counters()
     self.cache = cache if cache is not None else ResultCache(
         counters=self.counters)
@@ -265,7 +317,7 @@ class GraphQueryServer:
     self._cond = threading.Condition()
     self._engine_lock = threading.Lock()
     self._closed = False
-    self._queue: Deque[Tuple[Any, QuerySpec]] = deque()  # (cache key, spec)
+    self._policy: AdmissionPolicy = make_policy(admission)
     self._results: Dict[int, Any] = {}
     # Concurrent identical queries coalesce: one engine column serves every
     # ticket waiting on the same cache key.
@@ -275,6 +327,11 @@ class GraphQueryServer:
     self._pending_deadlines: Set[int] = set()
     self._wake_listeners: List[threading.Event] = []
     self._next_qid = 0
+    # Settled-ticket GC: settle/delivery order rings, lazily compacted.
+    self._settled_q: Deque[int] = deque()    # settle order (may hold stale)
+    self._delivered_q: Deque[int] = deque()  # first-delivery order
+    self._delivered: Set[int] = set()
+    self._num_settled_live = 0
 
     self._install_fn = jax.jit(self._install)
     self._extract_fn = jax.jit(
@@ -327,7 +384,7 @@ class GraphQueryServer:
       with self._cond:
         if self._closed:
           raise ServerClosed("server is closed")
-        if self._queue or any(k is not None for k in self._slot_key):
+        if self._policy.depth() or any(k is not None for k in self._slot_key):
           raise RuntimeError(
               "swap_graph requires an idle server: drain() queued and "
               "in-flight queries first")
@@ -366,6 +423,18 @@ class GraphQueryServer:
     return [self.submit(s, deadline=deadline, timeout=timeout)
             for s in specs]
 
+  def _inc_q(self, name: str, ticket: _Ticket, value: float = 1.0) -> None:
+    """Bump a query counter plus its per-tenant / per-class labels."""
+    self.counters.inc(name, value)
+    self.counters.inc_labeled(name, value, tenant=ticket.tenant)
+    if ticket.priority:
+      self.counters.inc_labeled(name, value, **{"class": ticket.priority})
+
+  def _admission_full_locked(self, req: AdmissionRequest) -> bool:
+    if self.max_queue is not None and self._policy.depth() >= self.max_queue:
+      return True
+    return self._policy.full_for(req)
+
   def _submit_locked(self, spec: QuerySpec, deadline: Optional[float],
                      timeout: Optional[float]) -> int:
     if self._closed:
@@ -383,72 +452,102 @@ class GraphQueryServer:
     key = self._cache_key(spec)
     ticket = _Ticket(qid=qid, key=key, event=threading.Event(),
                      submitted_at=now,
-                     deadline=None if deadline is None else now + deadline)
+                     deadline=None if deadline is None else now + deadline,
+                     tenant=spec.tenant, priority=spec.priority)
     self._tickets[qid] = ticket
-    self.counters.inc("queries.submitted")
-    hit = self.cache.get(key)
-    if hit is not None:
+    self._inc_q("queries.submitted", ticket)
+    hit = self.cache.get(key, _CACHE_MISS)
+    if hit is not _CACHE_MISS:
       self._settle_locked(ticket, value=hit)
-      self.counters.inc("queries.completed")
+      self._inc_q("queries.completed", ticket)
       return qid
     if ticket.deadline is not None:
       self._pending_deadlines.add(qid)
     if key in self._waiters:
       self._waiters[key].append(qid)
       self.counters.inc("queries.coalesced")
+      # A more urgent duplicate escalates the queued entry (no-op for FIFO).
+      self._policy.escalate(key, spec.priority, deadline=ticket.deadline)
       return qid
-    # New key → admission queue, subject to backpressure.
-    if self.max_queue is not None:
-      wait_until = None if timeout is None else now + timeout
-      while (len(self._queue) >= self.max_queue
-             and key not in self._waiters):
-        if self.backpressure == "reject":
-          self.counters.inc("queries.rejected")
-          self._settle_locked(ticket, error=QueryRejected(
-              f"admission queue full ({self.max_queue})"))
-          raise ticket.error
-        if self.backpressure == "shed-oldest":
-          self._shed_oldest_locked()
+    # New key → admission queue, subject to backpressure (global bound
+    # and/or the policy's per-tenant bounds).
+    req = AdmissionRequest(key=key, spec=spec, tenant=spec.tenant,
+                           priority=spec.priority, deadline=ticket.deadline,
+                           seq=qid, enqueued_at=now)
+    wait_until = None if timeout is None else now + timeout
+    while (self._admission_full_locked(req)
+           and key not in self._waiters
+           and not ticket.event.is_set()):
+      if self.backpressure == "reject":
+        self._inc_q("queries.rejected", ticket)
+        self._settle_locked(ticket, error=QueryRejected(
+            f"admission queue full (max_queue={self.max_queue}, "
+            f"policy={self._policy.name})"))
+        raise ticket.error
+      if self.backpressure == "shed-oldest":
+        if self._shed_victim_locked(req):
           continue
-        # "block": wait for _admit/shed/cancel to free a queue entry.
-        remaining = (None if wait_until is None
-                     else wait_until - self._clock())
-        if remaining is not None and remaining <= 0:
-          self.counters.inc("queries.rejected")
-          self._settle_locked(ticket, error=QueryRejected(
-              f"timed out after {timeout}s waiting for queue space"))
-          raise ticket.error
-        self._cond.wait(remaining)
-        if self._closed:
-          self._settle_locked(ticket, error=ServerClosed(
-              "server closed while waiting for queue space"))
-          raise ticket.error
-        # State may have shifted while we slept: the identical query may
-        # have completed (cache) — coalescing is handled below.
-        if key in self.cache:
-          self._settle_locked(ticket, value=self.cache.get(key))
-          self.counters.inc("queries.completed")
-          return qid
-      if key in self._waiters:
-        # Raced with another submitter of the same key while blocked.
-        self._waiters[key].append(qid)
-        self.counters.inc("queries.coalesced")
+        # Policy found nothing sheddable (e.g. only this tenant's bound
+        # blocks and its queue is empty): fall back to reject.
+        self._inc_q("queries.rejected", ticket)
+        self._settle_locked(ticket, error=QueryRejected(
+            "admission full and nothing sheddable "
+            f"(policy={self._policy.name})"))
+        raise ticket.error
+      # "block": wait for _admit/shed/cancel to free a queue entry.
+      remaining = (None if wait_until is None
+                   else wait_until - self._clock())
+      if remaining is not None and remaining <= 0:
+        self._inc_q("queries.rejected", ticket)
+        self._settle_locked(ticket, error=QueryRejected(
+            f"timed out after {timeout}s waiting for queue space"))
+        raise ticket.error
+      self._cond.wait(remaining)
+      if self._closed and not ticket.event.is_set():
+        self._settle_locked(ticket, error=ServerClosed(
+            "server closed while waiting for queue space"))
+        raise ticket.error
+      # State may have shifted while we slept: the identical query may
+      # have completed (cache) — coalescing is handled below.
+      hit = self.cache.get(key, _CACHE_MISS)
+      if hit is not _CACHE_MISS and not ticket.event.is_set():
+        self._settle_locked(ticket, value=hit)
+        self._inc_q("queries.completed", ticket)
         return qid
+    # The ticket may have settled while blocked (deadline expiry, cancel,
+    # abort-close) — it must NOT be enqueued; surface the stored outcome.
+    if ticket.event.is_set():
+      if ticket.error is not None:
+        raise ticket.error
+      return qid
+    if key in self._waiters:
+      # Raced with another submitter of the same key while blocked.
+      self._waiters[key].append(qid)
+      self.counters.inc("queries.coalesced")
+      self._policy.escalate(key, spec.priority, deadline=ticket.deadline)
+      return qid
     self._waiters[key] = [qid]
-    self._queue.append((key, spec))
+    self._policy.offer(req)
     self.counters.inc("queue.enqueued")
-    self.counters.set_gauge_max("queue.depth.high_water", len(self._queue))
+    self.counters.set_gauge_max("queue.depth.high_water",
+                                self._policy.depth())
     self._notify_work_locked()
     return qid
 
-  def _shed_oldest_locked(self) -> None:
-    key, spec = self._queue.popleft()
+  def _shed_victim_locked(self, incoming: Optional[AdmissionRequest] = None
+                          ) -> bool:
+    """Drop the policy's shed victim; False when nothing is sheddable."""
+    victim = self._policy.pick_victim(incoming)
+    if victim is None:
+      return False
     self.counters.inc("queue.removed")
-    for qid in self._waiters.pop(key, []):
-      self.counters.inc("queries.shed")
-      self._settle_locked(self._tickets[qid], error=QueryShed(
-          f"shed from full queue: {spec}"))
+    for qid in self._waiters.pop(victim.key, []):
+      ticket = self._tickets[qid]
+      self._inc_q("queries.shed", ticket)
+      self._settle_locked(ticket, error=QueryShed(
+          f"shed from full queue: {victim.spec}"))
     self._cond.notify_all()
+    return True
 
   def _settle_locked(self, ticket: _Ticket, value: Any = None,
                      error: Optional[BaseException] = None) -> None:
@@ -460,10 +559,48 @@ class GraphQueryServer:
     if error is None:
       self._results[ticket.qid] = value
     self._pending_deadlines.discard(ticket.qid)
-    self.counters.observe("query.latency_ms",
-                          (self._clock() - ticket.submitted_at) * 1000.0)
+    latency_ms = (self._clock() - ticket.submitted_at) * 1000.0
+    self.counters.observe("query.latency_ms", latency_ms)
+    self.counters.observe_labeled("query.latency_ms", latency_ms,
+                                  tenant=ticket.tenant)
     ticket.event.set()
+    self._settled_q.append(ticket.qid)
+    self._num_settled_live += 1
+    self._prune_tickets_locked()
     self._cond.notify_all()
+
+  # -- settled-ticket garbage collection ---------------------------------------
+
+  def _drop_ticket_locked(self, qid: int) -> None:
+    if self._tickets.pop(qid, None) is None:
+      return
+    self._results.pop(qid, None)
+    self._delivered.discard(qid)
+    self._num_settled_live -= 1
+
+  def _prune_tickets_locked(self) -> None:
+    """Bound settled-ticket retention: delivered tickets beyond
+    ``retain_delivered``, then (delivered-first) anything beyond
+    ``retain_settled``.  Pending tickets are never dropped."""
+    while len(self._delivered_q) > self.retain_delivered:
+      self._drop_ticket_locked(self._delivered_q.popleft())
+    while self._num_settled_live > self.retain_settled:
+      if self._delivered_q:
+        self._drop_ticket_locked(self._delivered_q.popleft())
+        continue
+      while self._settled_q and (
+          self._settled_q[0] not in self._tickets
+          or self._settled_q[0] in self._delivered):
+        self._settled_q.popleft()   # stale, or tracked by _delivered_q
+      if not self._settled_q:
+        break
+      self._drop_ticket_locked(self._settled_q.popleft())
+    # Keep the settle ring from accumulating stale entries forever.
+    while self._settled_q and self._settled_q[0] not in self._tickets:
+      self._settled_q.popleft()
+    if len(self._settled_q) > 2 * (self._num_settled_live + 16):
+      self._settled_q = deque(
+          q for q in self._settled_q if q in self._tickets)
 
   def result(self, qid: int, timeout: Optional[float] = 0.0) -> Optional[Any]:
     """The query's result; raises the stored :class:`QueryError` on failure.
@@ -473,6 +610,10 @@ class GraphQueryServer:
     ``timeout=x`` blocks up to x seconds and returns None on timeout.
     Blocking requires something to be driving rounds (a
     :class:`~repro.service.driver.ServerDriver` or a ``drain()`` caller).
+
+    Delivery marks the ticket garbage-collectable: it stays readable for
+    the next ``retain_delivered`` deliveries, after which this method
+    raises KeyError for its qid.
     """
     with self._cond:
       ticket = self._tickets.get(qid)
@@ -480,6 +621,11 @@ class GraphQueryServer:
       raise KeyError(f"unknown query id {qid}")
     if not ticket.event.wait(timeout):
       return None
+    with self._cond:
+      if qid in self._tickets and qid not in self._delivered:
+        self._delivered.add(qid)
+        self._delivered_q.append(qid)
+        self._prune_tickets_locked()
     if ticket.error is not None:
       raise ticket.error
     return ticket.value
@@ -514,12 +660,10 @@ class GraphQueryServer:
     if waiters:
       return
     del self._waiters[ticket.key]
-    for i, (key, _) in enumerate(self._queue):
-      if key == ticket.key:
-        del self._queue[i]
-        self.counters.inc("queue.removed")
-        self._cond.notify_all()
-        return
+    if self._policy.remove(ticket.key) is not None:
+      self.counters.inc("queue.removed")
+      self._cond.notify_all()
+      return
     if ticket.key in self._slot_key:
       slot = self._slot_key.index(ticket.key)
       self._slot_key[slot] = None
@@ -535,12 +679,19 @@ class GraphQueryServer:
   @property
   def num_queued(self) -> int:
     with self._cond:
-      return len(self._queue)
+      return self._policy.depth()
 
   @property
   def closed(self) -> bool:
     with self._cond:
       return self._closed
+
+  def queued_urgency(self) -> Optional[int]:
+    """Highest queued priority class (None when the queue is empty) — used
+    by :class:`~repro.service.driver.ServerDriver` to scan urgent servers
+    first."""
+    with self._cond:
+      return self._policy.max_urgency()
 
   def add_wake_listener(self, event: threading.Event) -> None:
     """Register an event set whenever new engine work arrives (driver API)."""
@@ -602,13 +753,19 @@ class GraphQueryServer:
   def _admit_locked(self) -> int:
     admitted = 0
     for slot in range(self.num_slots):
-      if self._slot_key[slot] is not None or not self._queue:
+      if self._slot_key[slot] is not None or not self._policy.depth():
         continue
-      key, spec = self._queue.popleft()
-      prop_col, active_col = self.family.init_column(spec)
+      req = self._policy.pop_next()
+      if req is None:
+        continue
+      wait_ms = (self._clock() - req.enqueued_at) * 1000.0
+      self.counters.observe("queue.wait_ms", wait_ms)
+      self.counters.observe_labeled("queue.wait_ms", wait_ms,
+                                    tenant=req.tenant)
+      prop_col, active_col = self.family.init_column(req.spec)
       self._state = self._install_fn(self._state, prop_col, active_col,
                                      jnp.int32(slot))
-      self._slot_key[slot] = key
+      self._slot_key[slot] = req.key
       admitted += 1
     if admitted:
       self.counters.inc("queries.admitted", admitted)
@@ -630,12 +787,19 @@ class GraphQueryServer:
       result = self.family.extract(col)
       waiters = self._waiters.pop(key, [])
       for qid in waiters:
-        self._settle_locked(self._tickets[qid], value=result)
-      self.cache.put(key, result)
+        ticket = self._tickets[qid]
+        if ticket.event.is_set():
+          continue   # settled while listed (defensive; normally removed)
+        self._settle_locked(ticket, value=result)
+        self._inc_q("queries.completed", ticket)
+      if not forced:
+        # A forced retire delivers the *partial* (non-converged) column to
+        # its waiters as a safety valve, but caching it would serve the
+        # wrong answer to every future identical query.
+        self.cache.put(key, result)
       self._slot_key[slot] = None
       retired += 1
       self.counters.inc("slots.retired")
-      self.counters.inc("queries.completed", float(len(waiters)))
       self.counters.observe("query.supersteps_to_converge",
                             float(iters[slot]))
       if forced:
@@ -721,10 +885,9 @@ class GraphQueryServer:
         for ticket in list(self._tickets.values()):
           if not ticket.event.is_set():
             self._settle_locked(ticket, error=err)
-        dropped = len(self._queue)
+        dropped = self._policy.clear()
         if dropped:
-          self.counters.inc("queue.removed", float(dropped))
-        self._queue.clear()
+          self.counters.inc("queue.removed", float(len(dropped)))
         self._waiters.clear()
         live = [s for s, k in enumerate(self._slot_key) if k is not None]
         if live:
@@ -748,6 +911,10 @@ class GraphQueryServer:
     snap["gauges"]["slots.in_flight"] = self.num_in_flight
     snap["gauges"]["queue.depth"] = self.num_queued
     snap["gauges"]["cache.size"] = len(self.cache)
+    with self._cond:
+      tenant_depths = self._policy.tenant_depths()
+    for tenant, depth in tenant_depths.items():
+      snap["gauges"][Counters.label_name("queue.depth", tenant=tenant)] = depth
     return snap
 
   def debug_snapshot(self) -> dict:
@@ -756,9 +923,11 @@ class GraphQueryServer:
       pending = [t.qid for t in self._tickets.values()
                  if not t.event.is_set()]
       return {
-          "queued_keys": [k for k, _ in self._queue],
+          "queued_keys": self._policy.keys(),
           "slot_keys": list(self._slot_key),
           "num_tickets": len(self._tickets),
           "pending_qids": pending,
           "closed": self._closed,
+          "admission_policy": self._policy.name,
+          "tenant_depth": self._policy.tenant_depths(),
       }
